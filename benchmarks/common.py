@@ -1,0 +1,41 @@
+"""Shared benchmark driver utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import SUPGQuery, array_oracle, precision_of, recall_of, \
+    run_query
+
+
+def run_trials(ds, target, method, gamma, budget, trials, delta=0.05,
+               seed0=0, weight_scheme="sqrt", two_stage=True):
+    """Repeated SUPG queries; returns dict of achieved/quality/failure."""
+    achieved, quality = [], []
+    t0 = time.time()
+    for t in range(trials):
+        q = SUPGQuery(target=target, gamma=gamma, delta=delta, budget=budget,
+                      method=method, weight_scheme=weight_scheme,
+                      two_stage=two_stage)
+        res = run_query(jax.random.PRNGKey(seed0 + t), ds.scores,
+                        array_oracle(ds.labels), q)
+        p = precision_of(res.selected, ds.truth_mask())
+        r = recall_of(res.selected, ds.truth_mask())
+        a, ql = (r, p) if target == "recall" else (p, r)
+        achieved.append(a)
+        quality.append(ql)
+    achieved, quality = np.asarray(achieved), np.asarray(quality)
+    return {
+        "failure_rate": float((achieved < gamma).mean()),
+        "achieved_p50": float(np.median(achieved)),
+        "achieved_min": float(achieved.min()),
+        "quality_p50": float(np.median(quality)),
+        "us_per_call": (time.time() - t0) / trials * 1e6,
+    }
+
+
+def emit(name, result, derived=""):
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{result.get('us_per_call', 0):.0f},{derived}")

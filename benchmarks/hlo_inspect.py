@@ -1,0 +1,68 @@
+"""HLO inspection tool for §Perf iterations: top collectives + big buffers.
+
+    PYTHONPATH=src python -m benchmarks.hlo_inspect --arch deepseek-v2-236b \
+        --shape train_4k [--units 1] [--top 20]
+
+Compiles the loop-free 1-unit cost probe on the single-pod mesh and prints
+the largest collective ops (kind, shape, bytes, replica-group size) — the
+dry-run profiler's equivalent of reading a TPU trace.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+
+from repro.configs import SHAPES_BY_NAME, get_config
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--units", type=int, default=1)
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+
+    import dataclasses
+    from repro.launch import dryrun
+    from repro.launch.mesh import make_production_mesh
+
+    from repro.models.meshctx import mesh_context
+    mesh = make_production_mesh()
+    cfg = dataclasses.replace(get_config(args.arch), shard_activations=True)
+    rcfg = dryrun.reduced_config(cfg, args.units)
+    shape = SHAPES_BY_NAME[args.shape]
+    with mesh_context(mesh):
+        lo = dryrun.lower_cell(rcfg, shape, mesh, donate=False, grad_accum=1)
+        comp = lo.compile()
+    txt = comp.as_text()
+
+    rows = []
+    for line in txt.splitlines():
+        m = dryrun._COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        blob, kind = m.group(1), m.group(2)
+        nbytes = 0
+        shapes = dryrun._SHAPE_RE.findall(blob)
+        for dt, dims in shapes:
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            nbytes += n * dryrun._DTYPE_BYTES[dt]
+        g = dryrun._GROUP_RE.search(line)
+        gsize = int(g.group(2)) if g else 0
+        rows.append((nbytes, kind, gsize, blob[:80]))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"{len(rows)} collectives, {total/1e9:.2f} GB result bytes "
+          f"(per device, {args.units} unit(s))")
+    for nbytes, kind, gsize, blob in rows[:args.top]:
+        print(f"  {nbytes/1e6:10.1f} MB  {kind:20s} g{gsize:<4d} {blob}")
+
+
+if __name__ == "__main__":
+    main()

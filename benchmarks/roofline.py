@@ -1,0 +1,118 @@
+"""Roofline analysis from the dry-run artifacts (results/dryrun.json).
+
+Per (arch x shape) on the single-pod mesh:
+    compute   = HLO_FLOPs / (chips * 197e12)        [bf16 peak / chip]
+    memory    = HLO_bytes / (chips * 819e9)         [HBM bw / chip]
+    collective= wire_bytes / (chips * 50e9)         [ICI per link]
+
+HLO_FLOPs / bytes are per-device numbers reconstructed from unrolled
+1-unit / 2-unit compiles (XLA's cost model does not multiply while-loop
+trip counts) and already reflect the sharding. Collective wire bytes per
+chip from the HLO result sizes:
+    all-reduce ~ 2x result bytes (ring reduce-scatter + all-gather),
+    all-gather / reduce-scatter / all-to-all ~ 1x, permute ~ 1x.
+MODEL_FLOPS = 6 * N_active * tokens (train; 3x less for inference) +
+attention term — the "useful" fraction of compiled compute.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.configs import SHAPES_BY_NAME, get_config
+from repro.models.model import count_params_analytic
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256
+
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def model_flops(cfg, shape):
+    tokens = shape.global_batch * shape.seq_len
+    n_active = count_params_analytic(cfg, active_only=True)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    if shape.kind == "decode":
+        tokens = shape.global_batch            # one token per request
+    flops = mult * n_active * tokens
+    if cfg.num_heads and cfg.block == "attn" and shape.kind != "decode":
+        hd = cfg.head_dim if not cfg.use_mla else (
+            cfg.qk_nope_head_dim + cfg.qk_rope_head_dim + cfg.v_head_dim)
+        att = 2.0 * shape.global_batch * shape.seq_len ** 2 \
+            * cfg.num_heads * hd / 2.0 * cfg.num_layers   # causal half
+        flops += att * (3.0 if shape.kind == "train" else 1.0)
+    return flops
+
+
+def collective_wire_bytes(colls):
+    total = 0.0
+    by_group = {}
+    for key, ent in colls.items():
+        kind, grp = key.split("/")
+        factor = _WIRE_FACTOR.get(kind, 1.0)
+        b = max(ent["bytes"], 0) * factor
+        total += b
+        by_group[grp] = by_group.get(grp, 0.0) + b
+    return total, by_group
+
+
+def analyze(record):
+    arch, shape_name = record["arch"], record["shape"]
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    flops_dev = record.get("hlo_flops_per_device", 0.0)
+    bytes_dev = record.get("hlo_bytes_per_device", 0.0)
+    coll_bytes, by_group = collective_wire_bytes(
+        record.get("collectives", {}))
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_global = flops_dev * CHIPS
+    useful = mf / hlo_global if hlo_global else 0.0
+    bound = max(terms.values())
+    # roofline fraction: useful model flops per second at the bound vs peak
+    ach_flops = mf / CHIPS / bound if bound else 0.0
+    return {
+        "arch": arch, "shape": shape_name,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf, "hlo_flops_global": hlo_global,
+        "useful_fraction": useful,
+        "roofline_fraction": ach_flops / PEAK_FLOPS,
+        "coll_by_group": by_group,
+        "memory_gb": (record.get("memory", {})
+                      .get("temp_size_in_bytes", 0)) / 1e9,
+    }
+
+
+def main(path="results/dryrun.json"):
+    recs = json.loads(pathlib.Path(path).read_text())
+    rows = []
+    for r in recs:
+        if not r.get("ok") or r.get("skipped") or \
+                not r["mesh"].startswith("single") or \
+                "hlo_flops_per_device" not in r:
+            continue
+        a = analyze(r)
+        rows.append(a)
+        print(f"roofline_{a['arch']}_{a['shape']},0,"
+              f"dom={a['dominant']};comp={a['t_compute_s']:.4f}s;"
+              f"mem={a['t_memory_s']:.4f}s;coll={a['t_collective_s']:.4f}s;"
+              f"useful={a['useful_fraction']:.2f};"
+              f"roofline={a['roofline_fraction']:.3f}")
+    out = pathlib.Path("results/roofline.json")
+    out.parent.mkdir(exist_ok=True)
+    out.write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Benchmark suite entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Sections:
+  paper_figures  — Figs 1/5/6/7/8/9/10/12 + Table 4 reproduction numbers
+  bench_kernels  — per-kernel allclose + reference timings
+  roofline       — per-(arch x shape) roofline terms from results/dryrun.json
+                   (skipped silently if the dry-run artifact is absent)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark names")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the slow statistical sweeps")
+    args = ap.parse_args()
+
+    from benchmarks import bench_kernels, paper_figures
+
+    benches = []
+    if not args.fast:
+        benches += [(f.__name__, f) for f in paper_figures.ALL]
+    else:
+        benches += [("bench_failure_precision",
+                     paper_figures.bench_failure_precision),
+                    ("bench_recall_target",
+                     paper_figures.bench_recall_target)]
+    benches += [(f.__name__, f) for f in bench_kernels.ALL]
+
+    failed = []
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append(name)
+
+    try:
+        from benchmarks import roofline
+        import pathlib
+        if pathlib.Path("results/dryrun.json").exists():
+            roofline.main()
+    except Exception:  # noqa: BLE001
+        traceback.print_exc()
+        failed.append("roofline")
+
+    if failed:
+        print(f"FAILED benchmarks: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

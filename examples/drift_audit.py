@@ -1,0 +1,46 @@
+"""Model-drift audit (Section 6.2 / Table 4 as an operational procedure).
+
+Shows why fixed proxy thresholds (the NoScope/PP deployment pattern) are
+unsafe in production, and how SUPG's query-time sampling makes selections
+drift-proof: the same query is re-run against the drifted corpus with a
+fresh (small) oracle budget, and the guarantee carries over automatically.
+
+    PYTHONPATH=src python examples/drift_audit.py
+"""
+import jax
+import numpy as np
+
+from repro.core import (SUPGQuery, array_oracle, precision_of, recall_of,
+                        run_query)
+from repro.core.thresholds import tau_unoci_r
+from repro.data.synthetic import make_drift_pair
+
+
+def main():
+    train, shifted = make_drift_pair(n=500_000, seed=0)
+    print(f"train TPR={train.tpr:.3%}  shifted TPR={shifted.tpr:.3%}")
+
+    gamma = 0.95
+    # --- deployment pattern of prior systems: threshold fit once ---------
+    tau_fixed = float(tau_unoci_r(train.scores, train.labels, gamma).tau)
+    sel = np.nonzero(shifted.scores >= tau_fixed)[0]
+    r_fixed = recall_of(sel, shifted.truth_mask())
+    print(f"fixed threshold (fit on train, tau={tau_fixed:.4f}): "
+          f"recall on shifted = {r_fixed:.3f} "
+          f"{'VIOLATES' if r_fixed < gamma else 'meets'} {gamma:.0%} target")
+
+    # --- SUPG: re-estimate at query time on the shifted corpus -----------
+    vals = []
+    for t in range(5):
+        q = SUPGQuery(target="recall", gamma=gamma, delta=0.05,
+                      budget=10_000, method="is")
+        res = run_query(jax.random.PRNGKey(t), shifted.scores,
+                        array_oracle(shifted.labels), q)
+        vals.append(recall_of(res.selected, shifted.truth_mask()))
+    print(f"SUPG at query time: recall on shifted = "
+          f"{np.mean(vals):.3f} (min {np.min(vals):.3f} over 5 runs) "
+          f"-> guarantee holds under drift")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Quickstart: a SUPG query with statistical guarantees in ~20 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds the paper's Beta(0.01, 1) synthetic dataset (1M records, ~1%
+positives), runs a recall-target and a precision-target query, and prints
+the achieved metrics — the guarantee holds with probability >= 95%.
+"""
+import jax
+import numpy as np
+
+from repro.core import (SUPGQuery, array_oracle, precision_of, recall_of,
+                        run_query)
+from repro.data.synthetic import make_beta
+
+
+def main():
+    ds = make_beta(n=1_000_000, alpha=0.01, beta=1.0, seed=0)
+    truth = ds.truth_mask()
+    print(f"dataset: 1M records, {truth.sum()} positives "
+          f"(TPR {ds.tpr:.3%})")
+
+    for target, gamma in (("recall", 0.9), ("precision", 0.9)):
+        query = SUPGQuery(target=target, gamma=gamma, delta=0.05,
+                          budget=10_000, method="is")
+        res = run_query(jax.random.PRNGKey(0), ds.scores,
+                        array_oracle(ds.labels), query)
+        p = precision_of(res.selected, truth)
+        r = recall_of(res.selected, truth)
+        print(f"{target}-target {gamma:.0%}: |R|={len(res.selected)} "
+              f"tau={res.tau:.4f} oracle_calls={res.oracle_calls} "
+              f"-> precision={p:.3f} recall={r:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""End-to-end training driver: train a proxy LM for a few hundred steps
+with the full production stack — pjit'd train_step, deterministic resumable
+data pipeline, fault-tolerant loop with atomic async checkpoints.
+
+    PYTHONPATH=src python examples/train_proxy.py [--steps 200] [--arch smoke]
+
+Uses a reduced-width config of the smollm family (the zoo's cheap-proxy
+tier) sized so a few hundred steps run on CPU in minutes. `--arch` accepts
+any registry id to train its smoke variant instead.
+"""
+import argparse
+import pathlib
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DeterministicSource
+from repro.launch import train as trainlib
+from repro.launch.fault import LoopConfig, TrainLoop
+from repro.models import model
+from repro.optim import adamw
+
+
+def proxy_config():
+    # ~1.1M params: 4L x 128d — trains to visible loss decrease in minutes.
+    return ModelConfig(name="proxy-small", family="dense", num_layers=4,
+                       d_model=128, num_heads=4, num_kv_heads=2, d_ff=512,
+                       vocab_size=512, dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--arch", default=None,
+                    help="registry id -> train its smoke config instead")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.arch else proxy_config()
+    print(f"training {cfg.name}: {cfg.num_layers}L d={cfg.d_model} "
+          f"vocab={cfg.vocab_size}")
+
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"parameters: {n_params/1e6:.2f}M")
+
+    opts = trainlib.TrainOptions(adamw=adamw.AdamWConfig(
+        lr=1e-3, warmup_steps=20, total_steps=args.steps))
+    step_fn = jax.jit(trainlib.make_train_step(cfg, opts))
+    opt_state = adamw.init(params)
+
+    # markov-chain-ish synthetic stream: learnable next-token structure
+    def make_batch(rng, step):
+        start = rng.integers(0, cfg.vocab_size, (args.batch, 1))
+        steps = rng.integers(1, 7, (args.batch, args.seq))
+        toks = (np.cumsum(np.concatenate([start, steps], axis=1), axis=1)
+                % cfg.vocab_size).astype(np.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    source = DeterministicSource(make_batch, seed=0)
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="proxy_ckpt_")
+    ckpt = CheckpointManager(ckpt_dir, keep=2)
+
+    losses = []
+
+    def on_step(step, metrics):
+        losses.append(float(metrics["loss"]))
+        if step % 25 == 0:
+            print(f"step {step:4d} loss {losses[-1]:.4f} "
+                  f"lr {float(metrics['lr']):.2e}")
+
+    loop = TrainLoop(step_fn, source, ckpt,
+                     LoopConfig(total_steps=args.steps, ckpt_every=50),
+                     on_step=on_step)
+    params, opt_state, step = loop.run(params, opt_state)
+
+    first, last = np.mean(losses[:10]), np.mean(losses[-10:])
+    print(f"done: step={step} loss {first:.3f} -> {last:.3f} "
+          f"(ckpts at {ckpt_dir}: steps {ckpt.all_steps()})")
+    assert last < first, "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

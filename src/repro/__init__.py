@@ -1,0 +1,2 @@
+"""repro — SUPG approximate selection framework (JAX, multi-pod)."""
+__version__ = "1.0.0"

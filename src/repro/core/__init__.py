@@ -1,0 +1,21 @@
+"""SUPG core — the paper's contribution: approximate selection with guarantees.
+
+Public API:
+  SUPGQuery / run_query / run_joint_query   query semantics (Section 3)
+  sampling.*                                uniform & optimal importance samplers
+  thresholds.*                              Algorithms 2-5 + U-NoCI baselines
+  bounds.*                                  Lemma-1 confidence bounds
+  binned.*                                  sketch-based distributed estimators
+"""
+from repro.core import bounds, sampling, thresholds
+from repro.core.oracle import BudgetedOracle, BudgetExceededError, array_oracle
+from repro.core.queries import (JointResult, QueryResult, SUPGQuery,
+                                precision_of, recall_of, run_joint_query,
+                                run_query)
+
+__all__ = [
+    "bounds", "sampling", "thresholds",
+    "BudgetedOracle", "BudgetExceededError", "array_oracle",
+    "SUPGQuery", "QueryResult", "JointResult",
+    "run_query", "run_joint_query", "precision_of", "recall_of",
+]

@@ -1,0 +1,124 @@
+"""Confidence bounds (Lemma 1 of the paper) and union-bound helpers.
+
+The paper's Lemma 1 (asymptotic, via Berry-Esseen-controlled t-statistics):
+
+    Pr[ mu_hat >= mu + sigma/sqrt(s) * sqrt(2 log 1/delta) ] <= delta
+    Pr[ mu_hat <= mu - sigma/sqrt(s) * sqrt(2 log 1/delta) ] <= delta
+
+yielding the helper functions (Eqs. 7-8):
+
+    UB(mu, sigma, s, delta) = mu + sigma/sqrt(s) * sqrt(2 log 1/delta)
+    LB(mu, sigma, s, delta) = mu - sigma/sqrt(s) * sqrt(2 log 1/delta)
+
+All functions here are pure jnp and safe under jit/vmap/shard_map. ``sigma``
+is the *sample* standard deviation (plug-in estimate), per Section 5.2.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gaussian_width(sigma, s, delta):
+    """Half-width sigma/sqrt(s) * sqrt(2 log(1/delta)) from Lemma 1."""
+    sigma = jnp.asarray(sigma, jnp.float32)
+    s = jnp.asarray(s, jnp.float32)
+    delta = jnp.asarray(delta, jnp.float32)
+    # Guard s == 0 (empty prefix in vectorized candidate scans): width -> +inf
+    safe_s = jnp.maximum(s, 1.0)
+    w = sigma / jnp.sqrt(safe_s) * jnp.sqrt(2.0 * jnp.log(1.0 / delta))
+    return jnp.where(s > 0, w, jnp.inf)
+
+
+def ub(mu, sigma, s, delta):
+    """Upper confidence bound UB(mu, sigma, s, delta) — Eq. (7)."""
+    return jnp.asarray(mu, jnp.float32) + gaussian_width(sigma, s, delta)
+
+
+def lb(mu, sigma, s, delta):
+    """Lower confidence bound LB(mu, sigma, s, delta) — Eq. (8)."""
+    return jnp.asarray(mu, jnp.float32) - gaussian_width(sigma, s, delta)
+
+
+def sample_mean_std(z, axis=-1):
+    """Plug-in estimates (mu_hat, sigma_hat) used throughout Section 5.
+
+    Uses the biased (1/n) variance as in the asymptotic t-statistic; at the
+    paper's regime (s > 100) the 1/n vs 1/(n-1) distinction is immaterial.
+    """
+    z = jnp.asarray(z, jnp.float32)
+    mu = jnp.mean(z, axis=axis)
+    sigma = jnp.std(z, axis=axis)
+    return mu, sigma
+
+
+def weighted_mean_std(z, weights, axis=-1):
+    """Mean/std of importance-reweighted samples ``z*m`` given multiplicities.
+
+    For importance sampling we form the set {f(x) m(x)} and treat it as an
+    i.i.d. sample of the reweighted estimator; weights here are sample
+    *inclusion counts* (with-replacement draws can repeat records).
+    """
+    z = jnp.asarray(z, jnp.float32)
+    w = jnp.asarray(weights, jnp.float32)
+    tot = jnp.maximum(jnp.sum(w, axis=axis), 1e-30)
+    mu = jnp.sum(w * z, axis=axis) / tot
+    var = jnp.sum(w * (z - jnp.expand_dims(mu, axis)) ** 2, axis=axis) / tot
+    return mu, jnp.sqrt(var)
+
+
+def union_bound_split(delta, k):
+    """delta/k failure-probability split for k simultaneous uses of Lemma 1."""
+    return jnp.asarray(delta, jnp.float32) / jnp.asarray(k, jnp.float32)
+
+
+def prefix_mean_std(z):
+    """Vectorized (mu, sigma, n) of every prefix z[:i+1] of a 1-D array.
+
+    Enables evaluating Lemma-1 bounds for *all* candidate thresholds in one
+    pass (Algorithm 3 / 5 evaluate prefixes of the score-sorted sample).
+    Returns arrays of shape z.shape with entry i describing prefix length i+1.
+    """
+    z = jnp.asarray(z, jnp.float32)
+    n = jnp.arange(1, z.shape[-1] + 1, dtype=jnp.float32)
+    csum = jnp.cumsum(z, axis=-1)
+    csq = jnp.cumsum(z * z, axis=-1)
+    mu = csum / n
+    var = jnp.maximum(csq / n - mu * mu, 0.0)
+    return mu, jnp.sqrt(var), n
+
+
+def weighted_prefix_mean_std(z, w):
+    """Weighted prefix statistics (mu, sigma, ess) of every prefix z[:i+1].
+
+    Weights are sample multiplicities / importance masses. The effective
+    sample size (Kish: (Σw)²/Σw²) is returned for use as ``s`` in Lemma 1 —
+    it equals the prefix length exactly for unit weights.
+    """
+    z = jnp.asarray(z, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    n = jnp.cumsum(w, axis=-1)
+    csum = jnp.cumsum(z * w, axis=-1)
+    csq = jnp.cumsum(z * z * w, axis=-1)
+    safe_n = jnp.maximum(n, 1e-30)
+    mu = csum / safe_n
+    var = jnp.maximum(csq / safe_n - mu * mu, 0.0)
+    ess = (n * n) / jnp.maximum(jnp.cumsum(w * w, axis=-1), 1e-30)
+    return mu, jnp.sqrt(var), ess
+
+
+def masked_prefix_mean_std(z, mask):
+    """Prefix statistics counting only entries where ``mask`` is True.
+
+    Entry i gives (mu, sigma, n) over {z[j] : j <= i, mask[j]}. Used by the
+    PT estimators where Z(tau) = {O(x) : A(x) >= tau} is a *subset* of the
+    sample prefix (stage-2 samples may sit below the candidate threshold).
+    """
+    z = jnp.asarray(z, jnp.float32)
+    m = jnp.asarray(mask, jnp.float32)
+    n = jnp.cumsum(m, axis=-1)
+    csum = jnp.cumsum(z * m, axis=-1)
+    csq = jnp.cumsum(z * z * m, axis=-1)
+    safe_n = jnp.maximum(n, 1.0)
+    mu = csum / safe_n
+    var = jnp.maximum(csq / safe_n - mu * mu, 0.0)
+    return mu, jnp.sqrt(var), n

@@ -1,0 +1,193 @@
+"""Distributed SUPG selection engine — the production query executor.
+
+Ties the selection plane together over sharded score stores:
+
+  1. build the global ScoreSketch (one psum of 48 KiB; Pallas score_hist
+     kernel per shard on TPU),
+  2. draw the oracle sample with exact global with-replacement semantics
+     via two-level sampling (multinomial over shard masses -> within-shard
+     inverse-CDF draws with globally-correct m(x) factors),
+  3. estimate tau with the exact sample-level estimators (Algorithms 2-5 —
+     the sample is tiny, so estimation is never distributed),
+  4. resolve the two-stage D' restriction through the sketch
+     (rank -> conservative bin edge, superset property), and
+  5. emit per-shard selection masks (zero-communication local filters).
+
+Shards here are host-local arrays (np / memmap via data.pipeline.ScoreStore);
+on a real fleet each worker holds its shard and the driver runs where the
+coordinator lives. Collective math matches core/distributed.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import binned, sampling, thresholds
+from repro.core.oracle import BudgetedOracle
+from repro.core.queries import SUPGQuery
+
+
+@dataclasses.dataclass
+class ShardedSelection:
+    masks: List[np.ndarray]        # per-shard boolean selection masks
+    tau: float
+    oracle_calls: int
+    sampled_positive_global: np.ndarray   # global ids of labeled positives
+
+    @property
+    def total_selected(self) -> int:
+        return int(sum(m.sum() for m in self.masks)) + \
+            int(self.sampled_positive_global.size and
+                sum(1 for _ in ()) or 0)
+
+
+class SelectionEngine:
+    """Executes SUPG queries over a list of score shards."""
+
+    def __init__(self, shards: Sequence[np.ndarray], num_bins: int = 4096,
+                 use_kernel: bool = False):
+        self.shards = [np.asarray(s, np.float32) for s in shards]
+        self.offsets = np.concatenate(
+            [[0], np.cumsum([s.shape[0] for s in self.shards])])
+        self.n_total = int(self.offsets[-1])
+        self.num_bins = num_bins
+        # 1. global sketch: per-shard pass + merge (psum on a fleet)
+        self.sketch = binned.merge_sketches(*[
+            binned.build_sketch(jnp.asarray(s), num_bins,
+                                use_kernel=use_kernel)
+            for s in self.shards])
+
+    # -- sampling -------------------------------------------------------
+
+    def _shard_masses(self, scheme: str, kappa: float = 0.1):
+        raws = np.asarray([
+            float(np.sum(np.sqrt(np.clip(s, 0, 1)) if scheme == "sqrt"
+                         else np.clip(s, 0, 1))) for s in self.shards])
+        counts = np.asarray([s.shape[0] for s in self.shards], np.float64)
+        z = max(raws.sum(), 1e-30)
+        mass = (1 - kappa) * raws / z + kappa * counts / counts.sum()
+        return mass / mass.sum(), raws.sum(), counts.sum()
+
+    def draw_sample(self, key, s: int, scheme: str = "sqrt",
+                    kappa: float = 0.1):
+        """Global with-replacement draws; returns (global_idx, m)."""
+        if scheme == "uniform":
+            idx = jax.random.randint(key, (s,), 0, self.n_total)
+            return np.asarray(idx), np.ones(s, np.float32)
+        mass, raw_total, n_total = self._shard_masses(scheme, kappa)
+        k_alloc, k_draw = jax.random.split(key)
+        alloc = np.asarray(jax.random.categorical(
+            k_alloc, jnp.log(jnp.asarray(mass, jnp.float32)), shape=(s,)))
+        out_idx = np.empty(s, np.int64)
+        out_m = np.empty(s, np.float32)
+        draw_keys = jax.random.split(k_draw, len(self.shards))
+        for sh, scores in enumerate(self.shards):
+            take = np.nonzero(alloc == sh)[0]
+            if take.size == 0:
+                continue
+            a = np.clip(scores, 0, 1)
+            raw = np.sqrt(a) if scheme == "sqrt" else a
+            p_global = (1 - kappa) * raw / raw_total + kappa / n_total
+            p_cond = p_global / p_global.sum()
+            ws = sampling.sample_weighted(draw_keys[sh],
+                                          jnp.asarray(p_cond), take.size)
+            local = np.asarray(ws.indices)
+            out_idx[take] = self.offsets[sh] + local
+            # joint draw probability = mass[sh] * p_cond = p_global exactly
+            # (mass[sh] is the shard's total p_global by construction)
+            out_m[take] = (1.0 / n_total) / np.maximum(p_global[local],
+                                                       1e-38)
+        return out_idx, out_m
+
+    def score_at(self, global_idx) -> np.ndarray:
+        gi = np.asarray(global_idx, np.int64)
+        sh = np.searchsorted(self.offsets, gi, side="right") - 1
+        out = np.empty(gi.shape[0], np.float32)
+        for i, (s, g) in enumerate(zip(sh, gi)):
+            out[i] = self.shards[s][g - self.offsets[s]]
+        return out
+
+    # -- query ----------------------------------------------------------
+
+    def run(self, key, oracle_fn: Callable, query: SUPGQuery) \
+            -> ShardedSelection:
+        oracle = BudgetedOracle(oracle_fn, query.budget)
+        s = query.budget
+        if query.target == "recall":
+            scheme = {"is": query.weight_scheme, "uniform": "uniform",
+                      "noci": "uniform"}[query.method]
+            idx, m = self.draw_sample(key, s, scheme)
+            o_s = oracle(idx)
+            a_s = self.score_at(idx)
+            if query.method == "noci":
+                res = thresholds.tau_unoci_r(a_s, o_s, query.gamma)
+            else:
+                res = thresholds.tau_ci_r(a_s, o_s, m, query.gamma,
+                                          query.delta)
+            tau = float(res.tau)
+        else:
+            k0, k1 = jax.random.split(key)
+            if query.method == "is" and query.two_stage:
+                idx0, m0 = self.draw_sample(k0, s // 2, query.weight_scheme)
+                o0 = oracle(idx0)
+                _, rank = thresholds.pt_stage1_nmatch(
+                    o0, m0, self.n_total, query.gamma, query.delta)
+                tau_dp = float(binned.rank_to_threshold(self.sketch,
+                                                        int(rank)))
+                # stage 2: uniform on D' via per-shard masked draws
+                idx1 = self._uniform_in_region(k1, s - s // 2, tau_dp)
+                o1 = oracle(idx1)
+                a1 = self.score_at(idx1)
+                res = thresholds.tau_ci_p(a1, o1, query.gamma,
+                                          query.delta / 2.0,
+                                          min_step=query.min_step)
+            else:
+                scheme = ("uniform" if query.method in ("uniform", "noci")
+                          else query.weight_scheme)
+                idx, m = self.draw_sample(k0, s, scheme)
+                o_s = oracle(idx)
+                a_s = self.score_at(idx)
+                if query.method == "noci":
+                    res = thresholds.tau_unoci_p(a_s, o_s, query.gamma)
+                else:
+                    res = thresholds.tau_ci_p(
+                        a_s, o_s, query.gamma, query.delta,
+                        m_s=None if scheme == "uniform" else m,
+                        min_step=query.min_step)
+            tau = float(res.tau)
+
+        masks = [s_arr >= tau for s_arr in self.shards]
+        pos = oracle.labeled_positives()
+        # fold labeled positives into their shard masks
+        for g in pos:
+            sh = int(np.searchsorted(self.offsets, g, side="right") - 1)
+            masks[sh][g - self.offsets[sh]] = True
+        return ShardedSelection(masks=masks, tau=tau,
+                                oracle_calls=oracle.calls_used,
+                                sampled_positive_global=pos)
+
+    def _uniform_in_region(self, key, s, tau):
+        """Uniform draws from {A >= tau} across shards."""
+        counts = np.asarray([(sh >= tau).sum() for sh in self.shards],
+                            np.float64)
+        mass = counts / max(counts.sum(), 1)
+        k_alloc, k_draw = jax.random.split(key)
+        alloc = np.asarray(jax.random.categorical(
+            k_alloc, jnp.log(jnp.asarray(np.maximum(mass, 1e-30),
+                                         jnp.float32)), shape=(s,)))
+        out = np.empty(s, np.int64)
+        dkeys = jax.random.split(k_draw, len(self.shards))
+        for sh, scores in enumerate(self.shards):
+            take = np.nonzero(alloc == sh)[0]
+            if take.size == 0:
+                continue
+            region = np.nonzero(scores >= tau)[0]
+            pick = np.asarray(jax.random.randint(
+                dkeys[sh], (take.size,), 0, max(region.size, 1)))
+            out[take] = self.offsets[sh] + region[np.minimum(
+                pick, max(region.size - 1, 0))]
+        return out

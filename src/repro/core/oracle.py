@@ -1,0 +1,80 @@
+"""Oracle / proxy UDF interfaces and budget accounting.
+
+The paper's operational model (Section 4.1): the user supplies
+  * a proxy model A(x) in [0,1] — cheap, executed over the complete dataset
+    (in this framework: a distributed `serve` pass of one of the configured
+    architectures, see launch/serve.py), and
+  * an oracle predicate O(x) in {0,1} — expensive (human, or an oracle-grade
+    model), rate-limited by the query's ORACLE LIMIT.
+
+`BudgetedOracle` wraps the user's callback with hard budget enforcement and
+deduplicated-call accounting (repeat draws of the same record — possible
+under with-replacement sampling — are answered from a cache and do NOT
+consume budget, matching how a batch labeling system would behave).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+
+class BudgetExceededError(RuntimeError):
+    """Raised when a query attempts to exceed its ORACLE LIMIT."""
+
+
+class BudgetedOracle:
+    def __init__(self, fn: Callable[[np.ndarray], np.ndarray], budget: int):
+        self._fn = fn
+        self.budget = int(budget)
+        self.calls_used = 0
+        self._cache: dict[int, float] = {}
+
+    @property
+    def remaining(self) -> int:
+        return self.budget - self.calls_used
+
+    def __call__(self, indices) -> np.ndarray:
+        """Label a batch of record indices; returns float32 {0,1} labels."""
+        idx = np.asarray(indices).reshape(-1)
+        out = np.empty(idx.shape[0], np.float32)
+        missing_pos, missing_idx = [], []
+        for pos, i in enumerate(idx):
+            key = int(i)
+            if key in self._cache:
+                out[pos] = self._cache[key]
+            else:
+                missing_pos.append(pos)
+                missing_idx.append(key)
+        # Deduplicate new indices (with-replacement draws repeat records).
+        uniq = sorted(set(missing_idx))
+        if uniq:
+            if self.calls_used + len(uniq) > self.budget:
+                raise BudgetExceededError(
+                    f"oracle budget {self.budget} exceeded: "
+                    f"{self.calls_used} used, {len(uniq)} requested")
+            labels = np.asarray(self._fn(np.asarray(uniq, np.int64)),
+                                np.float32).reshape(-1)
+            if labels.shape[0] != len(uniq):
+                raise ValueError("oracle returned wrong number of labels")
+            self.calls_used += len(uniq)
+            lookup = dict(zip(uniq, labels))
+            self._cache.update(lookup)
+            for pos, key in zip(missing_pos, missing_idx):
+                out[pos] = self._cache[key]
+        return out
+
+    def labeled_positives(self) -> np.ndarray:
+        """Indices labeled positive so far — the R1 component of Algorithm 1."""
+        return np.asarray(
+            [i for i, v in self._cache.items() if v > 0.5], np.int64)
+
+
+def array_oracle(labels) -> Callable[[np.ndarray], np.ndarray]:
+    """Oracle backed by a ground-truth label array (tests / benchmarks)."""
+    arr = np.asarray(labels, np.float32)
+
+    def fn(indices):
+        return arr[np.asarray(indices, np.int64)]
+
+    return fn

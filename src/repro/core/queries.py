@@ -1,0 +1,205 @@
+"""SUPG query execution — Algorithm 1 plus RT/PT/JT semantics (Section 3).
+
+A query is:
+
+    SELECT * FROM D WHERE oracle(x) ORACLE LIMIT s
+    USING proxy_scores [RECALL | PRECISION] TARGET gamma WITH PROBABILITY 1-delta
+
+`run_query` drives Algorithm 1:
+
+    S   <- SampleOracle(D)            (core.sampling — uniform / sqrt-IS)
+    tau <- EstimateTau(S)             (core.thresholds — Algs. 2-5)
+    R   <- {x in S : O(x)=1}  ∪  {x in D : A(x) >= tau}
+
+The sampled positives R1 are always included — for RT queries they can only
+help recall; for PT queries they are exact positives so they can only help
+precision. Joint-target (JT) queries (Appendix A) run the RT estimator with
+an optimistic budget then exhaustively filter false positives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core import sampling, thresholds
+from repro.core.oracle import BudgetedOracle
+
+
+@dataclasses.dataclass(frozen=True)
+class SUPGQuery:
+    target: str                 # 'recall' | 'precision'
+    gamma: float                # target value in (0, 1)
+    delta: float = 0.05         # failure probability
+    budget: int = 10_000        # ORACLE LIMIT
+    method: str = "is"          # 'is' (SUPG), 'uniform' (U-CI), 'nocI' (U-NoCI)
+    weight_scheme: str = "sqrt"  # 'sqrt' (Theorem 1) | 'prop' (baseline)
+    two_stage: bool = True      # PT only: Algorithm 5 vs one-stage
+    defensive: bool = True      # Owen-Zhou defensive mixing
+    min_step: int = thresholds.MIN_STEP
+
+    def __post_init__(self):
+        if self.target not in ("recall", "precision"):
+            raise ValueError(f"bad target {self.target}")
+        if not 0.0 < self.gamma < 1.0:
+            raise ValueError("gamma must lie in (0,1)")
+        if not 0.0 < self.delta < 1.0:
+            raise ValueError("delta must lie in (0,1)")
+
+
+@dataclasses.dataclass
+class QueryResult:
+    selected: np.ndarray        # sorted record indices of R = R1 ∪ R2
+    tau: float                  # proxy threshold used for R2
+    oracle_calls: int           # budget actually consumed
+    corrected_target: float     # gamma' diagnostics (RT)
+    n_sampled_positives: int    # |R1|
+
+    def mask(self, n: int) -> np.ndarray:
+        m = np.zeros(n, bool)
+        m[self.selected] = True
+        return m
+
+
+def _labels_for(sample, oracle):
+    return oracle(np.asarray(sample.indices))
+
+
+def run_query(key, scores, oracle_fn, query: SUPGQuery) -> QueryResult:
+    """Execute a SUPG query against proxy scores and an oracle callback.
+
+    scores:    (n,) float array of proxy scores A(x) for every record.
+    oracle_fn: callback indices -> {0,1} labels (wrapped with budget
+               enforcement here).
+    """
+    scores = np.asarray(jax.device_get(scores), np.float32)
+    n = scores.shape[0]
+    oracle = BudgetedOracle(oracle_fn, query.budget)
+    s = query.budget
+
+    if query.target == "recall":
+        res = _run_rt(key, scores, oracle, s, query)
+    else:
+        res = _run_pt(key, scores, oracle, s, query)
+    tau, corrected = res
+
+    r1 = oracle.labeled_positives()
+    r2 = np.nonzero(scores >= tau)[0]
+    selected = np.union1d(r1, r2)
+    return QueryResult(selected=selected, tau=float(tau),
+                       oracle_calls=oracle.calls_used,
+                       corrected_target=float(corrected),
+                       n_sampled_positives=int(r1.shape[0]))
+
+
+def _run_rt(key, scores, oracle, s, q):
+    scheme = {"is": q.weight_scheme, "uniform": "uniform",
+              "noci": "uniform"}[q.method]
+    sample = sampling.draw_oracle_sample(key, scores, s, scheme=scheme,
+                                         defensive=q.defensive)
+    o_s = _labels_for(sample, oracle)
+    a_s = scores[np.asarray(sample.indices)]
+    if q.method == "noci":
+        res = thresholds.tau_unoci_r(a_s, o_s, q.gamma)
+    else:
+        res = thresholds.tau_ci_r(a_s, o_s, sample.m, q.gamma, q.delta)
+    return float(res.tau), float(res.corrected_target)
+
+
+def _run_pt(key, scores, oracle, s, q):
+    k0, k1 = jax.random.split(jax.random.PRNGKey(0) if key is None else key)
+    if q.method == "noci":
+        sample = sampling.draw_oracle_sample(k0, scores, s, scheme="uniform")
+        o_s = _labels_for(sample, oracle)
+        a_s = scores[np.asarray(sample.indices)]
+        res = thresholds.tau_unoci_p(a_s, o_s, q.gamma)
+        return float(res.tau), q.gamma
+
+    if q.method == "uniform" or not q.two_stage:
+        scheme = "uniform" if q.method == "uniform" else q.weight_scheme
+        sample = sampling.draw_oracle_sample(k0, scores, s, scheme=scheme)
+        o_s = _labels_for(sample, oracle)
+        a_s = scores[np.asarray(sample.indices)]
+        m_s = None if scheme == "uniform" else sample.m
+        res = thresholds.tau_ci_p(a_s, o_s, q.gamma, q.delta, m_s=m_s,
+                                  min_step=q.min_step)
+        return float(res.tau), q.gamma
+
+    # ---- Algorithm 5: two-stage importance sampling -----------------------
+    # Stage 1 (budget s/2): UB the number of matches; restrict to D'.
+    s0 = s // 2
+    sample0 = sampling.draw_oracle_sample(k0, scores, s0,
+                                          scheme=q.weight_scheme,
+                                          defensive=q.defensive)
+    o_s0 = _labels_for(sample0, oracle)
+    n_match, rank = thresholds.pt_stage1_nmatch(
+        o_s0, sample0.m, scores.shape[0], q.gamma, q.delta)
+    tau_dprime = thresholds.dprime_cutoff_score(scores, rank)
+
+    # Stage 2 (budget s/2): sample *uniformly within D'* — the restriction
+    # itself is the importance step; uniform-in-D' keeps the printed
+    # Algorithm-5 precision estimator (plain O-values) unbiased.
+    mask = (scores >= float(tau_dprime)).astype(np.float32)
+    sample1 = sampling.sample_weighted_masked(
+        k1, np.ones_like(scores), mask, s - s0)
+    o_s1 = _labels_for(sample1, oracle)
+    a_s1 = scores[np.asarray(sample1.indices)]
+    res = thresholds.tau_ci_p(a_s1, o_s1, q.gamma, q.delta / 2.0,
+                              min_step=q.min_step)
+    return float(res.tau), q.gamma
+
+
+# ---------------------------------------------------------------------------
+# Joint-target queries (Appendix A)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class JointResult:
+    selected: np.ndarray
+    oracle_calls: int
+    stage2_tau: float
+
+
+def run_joint_query(key, scores, oracle_fn, gamma_recall, gamma_precision,
+                    delta=0.05, stage_budget=10_000, method="is"):
+    """JT query: RT subroutine + exhaustive false-positive filtering.
+
+    1. optimistically allocate budget B for the RT stage;
+    2. run IS-CI-R (or U-CI-R) at gamma_recall — with prob 1-delta the
+       candidate set has sufficient recall;
+    3. exhaustively oracle-label the candidate set, keep true positives.
+       Total oracle usage is unbounded by design (Appendix A semantics).
+    """
+    scores_np = np.asarray(jax.device_get(scores), np.float32)
+    q = SUPGQuery(target="recall", gamma=gamma_recall, delta=delta,
+                  budget=stage_budget, method=method)
+    # RT stage with its own budget accounting.
+    rt_res = run_query(key, scores_np, oracle_fn, q)
+    # Stage 3: exhaustive filtering of the candidate set. The oracle has no
+    # budget cap here; reuse cached labels from the RT stage where possible.
+    oracle = BudgetedOracle(oracle_fn, budget=scores_np.shape[0])
+    labels = oracle(rt_res.selected)
+    keep = rt_res.selected[labels > 0.5]
+    total_calls = rt_res.oracle_calls + oracle.calls_used
+    return JointResult(selected=keep, oracle_calls=total_calls,
+                       stage2_tau=rt_res.tau)
+
+
+# ---------------------------------------------------------------------------
+# Result metrics (Section 3.2)
+# ---------------------------------------------------------------------------
+
+def precision_of(selected, truth_mask) -> float:
+    sel = np.zeros_like(truth_mask, dtype=bool)
+    sel[np.asarray(selected, np.int64)] = True
+    denom = max(int(sel.sum()), 1)
+    return float((sel & truth_mask).sum() / denom)
+
+
+def recall_of(selected, truth_mask) -> float:
+    sel = np.zeros_like(truth_mask, dtype=bool)
+    sel[np.asarray(selected, np.int64)] = True
+    denom = max(int(truth_mask.sum()), 1)
+    return float((sel & truth_mask).sum() / denom)

@@ -1,0 +1,132 @@
+"""Oracle-sample selection: uniform and optimal importance sampling.
+
+Implements the sampling half of the SUPG algorithms:
+
+* uniform i.i.d. sampling (the NoScope / probabilistic-predicates baseline),
+* importance sampling with the paper's *optimal* weights  w(x) ∝ sqrt(A(x))·u(x)
+  (Theorem 1), with the suboptimal proportional weights w ∝ A(x) kept as a
+  baseline for the Figure-8 comparison,
+* defensive mixing  w ← 0.9·w/||w||₁ + 0.1·𝟙/|D|  (Owen & Zhou),
+* the reweighting factors m(x) = u(x)/w(x) used by Eqs. (11)-(12).
+
+All samplers draw WITH replacement (as the paper's estimators assume i.i.d.
+draws from w) via Gumbel-max / categorical sampling, so they run on-device and
+shard cleanly over a data axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+DEFENSIVE_KAPPA = 0.1  # mass of the uniform mixture component (paper: 0.1)
+
+
+class WeightedSample(NamedTuple):
+    """Result of a sampling round.
+
+    indices:  (s,) int32 record indices into the dataset (with replacement)
+    m:        (s,) float32 reweighting factors m(x) = u(x)/w(x)
+    w:        (s,) float32 the sampling probabilities of the drawn records
+    """
+
+    indices: jnp.ndarray
+    m: jnp.ndarray
+    w: jnp.ndarray
+
+
+def uniform_probs(n):
+    return jnp.full((n,), 1.0 / n, jnp.float32)
+
+
+def sqrt_proxy_weights(scores, defensive=True, kappa=DEFENSIVE_KAPPA):
+    """Theorem-1 optimal weights: w ∝ sqrt(A(x)) with defensive mixing."""
+    w = jnp.sqrt(jnp.clip(jnp.asarray(scores, jnp.float32), 0.0, 1.0))
+    return _normalize_and_mix(w, defensive, kappa)
+
+
+def proportional_proxy_weights(scores, defensive=True, kappa=DEFENSIVE_KAPPA):
+    """Baseline weights w ∝ A(x) — provably no better than uniform (Sec 10.2)."""
+    w = jnp.clip(jnp.asarray(scores, jnp.float32), 0.0, 1.0)
+    return _normalize_and_mix(w, defensive, kappa)
+
+
+def _normalize_and_mix(w, defensive, kappa):
+    n = w.shape[0]
+    tot = jnp.sum(w)
+    # Degenerate all-zero proxy: fall back to uniform.
+    w = jnp.where(tot > 0, w / jnp.maximum(tot, 1e-30), 1.0 / n)
+    if defensive:
+        w = (1.0 - kappa) * w + kappa / n
+    return w
+
+
+def sample_uniform(key, n, s):
+    """Uniform with-replacement sample of s records out of n."""
+    idx = jax.random.randint(key, (s,), 0, n)
+    m = jnp.ones((s,), jnp.float32)  # u/w = 1 for uniform
+    return WeightedSample(idx, m, jnp.full((s,), 1.0 / n, jnp.float32))
+
+
+def _inverse_cdf_draw(key, probs, s):
+    """s with-replacement categorical draws in O(n + s log n) memory.
+
+    jax.random.categorical materializes an (s, n) Gumbel field — fatal at
+    n ~ 1e6+. Inverse-CDF transform sampling (cumsum + searchsorted) is the
+    standard streaming-scale substitute and is exactly equivalent in
+    distribution (up to fp32 cdf rounding; the cdf is renormalized by its
+    final value so total mass is exactly 1).
+    """
+    cdf = jnp.cumsum(probs)
+    cdf = cdf / cdf[-1]
+    u = jax.random.uniform(key, (s,), jnp.float32)
+    idx = jnp.searchsorted(cdf, u, side="left")
+    return jnp.clip(idx, 0, probs.shape[0] - 1).astype(jnp.int32)
+
+
+def sample_weighted(key, probs, s):
+    """With-replacement sample from an explicit probability vector."""
+    probs = jnp.asarray(probs, jnp.float32)
+    n = probs.shape[0]
+    idx = _inverse_cdf_draw(key, probs, s)
+    w_drawn = probs[idx]
+    m = (1.0 / n) / jnp.maximum(w_drawn, 1e-38)
+    return WeightedSample(idx, m, w_drawn)
+
+
+def sample_weighted_masked(key, probs, mask, s):
+    """Weighted sampling restricted to records where mask=1 (stage 2 of PT).
+
+    Probabilities are renormalized over the masked subset; m(x) is computed
+    w.r.t. the *uniform distribution on the masked subset*, matching the
+    paper's stage-2 estimator which treats D' as the population.
+    """
+    probs = jnp.asarray(probs, jnp.float32) * jnp.asarray(mask, jnp.float32)
+    tot = jnp.sum(probs)
+    n_sub = jnp.maximum(jnp.sum(mask), 1.0)
+    probs = jnp.where(tot > 0, probs / jnp.maximum(tot, 1e-30),
+                      jnp.asarray(mask, jnp.float32) / n_sub)
+    idx = _inverse_cdf_draw(key, probs, s)
+    w_drawn = probs[idx]
+    m = (1.0 / n_sub) / jnp.maximum(w_drawn, 1e-38)
+    return WeightedSample(idx, m, w_drawn)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "scheme", "defensive"))
+def draw_oracle_sample(key, scores, s, scheme="sqrt", defensive=True):
+    """One-stop sampler used by the query layer.
+
+    scheme: 'uniform' | 'sqrt' (Theorem 1 optimal) | 'prop' (baseline).
+    """
+    n = scores.shape[0]
+    if scheme == "uniform":
+        return sample_uniform(key, n, s)
+    if scheme == "sqrt":
+        probs = sqrt_proxy_weights(scores, defensive=defensive)
+    elif scheme == "prop":
+        probs = proportional_proxy_weights(scores, defensive=defensive)
+    else:
+        raise ValueError(f"unknown sampling scheme: {scheme}")
+    return sample_weighted(key, probs, s)

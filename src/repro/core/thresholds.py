@@ -1,0 +1,218 @@
+"""Proxy-threshold estimation — Algorithms 2-5 of the paper, vectorized in JAX.
+
+Estimators (names follow Section 5):
+
+  U-NoCI-R / U-NoCI-P : empirical threshold on a uniform sample, *no* CI
+                        (the NoScope / probabilistic-predicates baseline —
+                        provides NO guarantee; kept for Figures 1/5/6).
+  U-CI-R   (Alg. 2)   : uniform sample + Lemma-1 corrected recall target.
+  U-CI-P   (Alg. 3)   : uniform sample + per-candidate precision LBs with a
+                        delta/M union bound over M = ceil(s/m) candidates.
+  IS-CI-R  (Alg. 4)   : sqrt-proxy importance sample + reweighted Alg. 2.
+  IS-CI-P  (Alg. 5)   : two-stage — stage 1 upper-bounds n_match with a
+                        weighted sample; stage 2 samples from the top
+                        n_match/gamma scores and runs the Alg. 3 scan.
+
+Every estimator is a pure function of (sample arrays, targets); sampling and
+oracle calls live in queries.py. All are jit-compatible: selection over
+thresholds is expressed as prefix scans over score-sorted samples.
+
+Tie/convention notes: thresholds returned are *inclusive* (the query returns
+{x : A(x) >= tau}); selecting "the largest tau with Recall >= gamma" maps to
+"the shortest descending-sorted prefix whose recall passes gamma".
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bounds
+
+MIN_STEP = 100  # paper's minimum candidate step size m
+
+
+class ThresholdResult(NamedTuple):
+    tau: jnp.ndarray            # scalar float32 — inclusive score threshold
+    corrected_target: jnp.ndarray  # gamma' (RT) or gamma (PT); diagnostics
+    n_candidates: jnp.ndarray   # M for PT scans, 1 for RT
+    valid: jnp.ndarray          # bool — False if no candidate met the target
+
+
+def _sort_desc(a_s, *arrays):
+    order = jnp.argsort(-a_s)
+    return (a_s[order],) + tuple(arr[order] for arr in arrays)
+
+
+# ---------------------------------------------------------------------------
+# Recall-target estimators
+# ---------------------------------------------------------------------------
+
+def _recall_prefix_curve(a_desc, om_desc):
+    """Recall_{S_w}(tau_j) for every prefix j (tau_j = a_desc[j])."""
+    csum = jnp.cumsum(om_desc)
+    total = jnp.maximum(csum[-1], 1e-30)
+    return csum / total
+
+
+def _max_tau_for_recall(a_desc, recall_curve, gamma):
+    """max{tau : Recall(tau) >= gamma} == score at the shortest passing prefix.
+
+    If even the full sample misses gamma (only possible with gamma > 1 after
+    correction), fall back to tau = -inf (return everything — always valid
+    for recall).
+    """
+    ok = recall_curve >= gamma
+    any_ok = jnp.any(ok)
+    # argmax finds first True; guard the all-False case.
+    j = jnp.argmax(ok)
+    tau = jnp.where(any_ok, a_desc[j], -jnp.inf)
+    return tau, any_ok
+
+
+@jax.jit
+def tau_unoci_r(a_s, o_s, gamma):
+    """U-NoCI-R: empirical threshold, no confidence correction (Eq. 6)."""
+    a_desc, o_desc = _sort_desc(jnp.asarray(a_s, jnp.float32),
+                                jnp.asarray(o_s, jnp.float32))
+    curve = _recall_prefix_curve(a_desc, o_desc)
+    tau, _ = _max_tau_for_recall(a_desc, curve, gamma)
+    return ThresholdResult(tau, jnp.float32(gamma), jnp.int32(1),
+                           jnp.bool_(True))
+
+
+@jax.jit
+def tau_ci_r(a_s, o_s, m_s, gamma, delta):
+    """Algorithms 2 & 4 (unified): CI-corrected recall-target threshold.
+
+    For uniform samples pass m_s = 1; for importance samples pass the
+    reweighting factors m(x) = u(x)/w(x). Implements:
+
+        tau_o  <- max{tau : Recall_{S_w}(tau) >= gamma}
+        Z1/Z2  <- reweighted positives above/below tau_o
+        gamma' <- UB(Z1)/(UB(Z1) + LB(Z2))        (each at delta/2)
+        tau'   <- max{tau : Recall_{S_w}(tau) >= gamma'}
+    """
+    a_s = jnp.asarray(a_s, jnp.float32)
+    o_s = jnp.asarray(o_s, jnp.float32)
+    m_s = jnp.broadcast_to(jnp.asarray(m_s, jnp.float32), a_s.shape)
+    s = a_s.shape[0]
+
+    a_desc, om_desc = _sort_desc(a_s, o_s * m_s)
+    curve = _recall_prefix_curve(a_desc, om_desc)
+    tau_o, _ = _max_tau_for_recall(a_desc, curve, gamma)
+
+    above = (a_desc >= tau_o).astype(jnp.float32)
+    z1 = om_desc * above          # 1[A >= tau_o] O m, all s entries
+    z2 = om_desc * (1.0 - above)  # 1[A <  tau_o] O m
+    mu1, sg1 = bounds.sample_mean_std(z1)
+    mu2, sg2 = bounds.sample_mean_std(z2)
+    ub1 = bounds.ub(mu1, sg1, s, delta / 2.0)
+    lb2 = jnp.maximum(bounds.lb(mu2, sg2, s, delta / 2.0), 0.0)
+    gamma_p = jnp.clip(ub1 / jnp.maximum(ub1 + lb2, 1e-30), gamma, 1.0)
+
+    tau_p, ok = _max_tau_for_recall(a_desc, curve, gamma_p)
+    # gamma' > max achievable recall on S => take the most conservative
+    # threshold observed (include the whole sampled range).
+    tau_p = jnp.where(ok, tau_p, a_desc[-1])
+    return ThresholdResult(tau_p, gamma_p, jnp.int32(1), jnp.bool_(True))
+
+
+# ---------------------------------------------------------------------------
+# Precision-target estimators
+# ---------------------------------------------------------------------------
+
+def _precision_candidate_scan(a_desc, o_desc, w_desc, gamma, delta,
+                              min_step=MIN_STEP):
+    """Shared Algorithm-3 scan: per-candidate precision LBs, delta/M each.
+
+    Candidates are the descending-sorted sample prefixes of length
+    j in {m, 2m, ..., s}; candidate threshold tau_j = a_desc[j-1]. For each,
+    Z(tau_j) = weighted O-values of the prefix; LB uses Lemma 1 at delta/M.
+    Returns the smallest passing threshold (largest passing prefix).
+    """
+    s = a_desc.shape[0]
+    m_step = min(min_step, s)
+    num_cand = max(s // m_step, 1)
+
+    mu, sg, n = bounds.weighted_prefix_mean_std(o_desc, w_desc)
+    p_l = bounds.lb(mu, sg, n, delta / num_cand)
+
+    idx = jnp.arange(1, s + 1)
+    is_cand = (idx % m_step == 0) & (idx <= num_cand * m_step)
+    passing = is_cand & (p_l > gamma)
+
+    any_pass = jnp.any(passing)
+    # Smallest tau == largest passing prefix == last passing index.
+    j = jnp.where(any_pass,
+                  (s - 1) - jnp.argmax(passing[::-1]),
+                  0)
+    tau = jnp.where(any_pass, a_desc[j], jnp.inf)  # inf => empty set (valid)
+    return tau, jnp.int32(num_cand), any_pass
+
+
+@jax.jit
+def tau_unoci_p(a_s, o_s, gamma):
+    """U-NoCI-P: min{tau : empirical Precision_S(tau) >= gamma} (Eq. 5)."""
+    a_desc, o_desc = _sort_desc(jnp.asarray(a_s, jnp.float32),
+                                jnp.asarray(o_s, jnp.float32))
+    n = jnp.arange(1, a_desc.shape[0] + 1, dtype=jnp.float32)
+    prec = jnp.cumsum(o_desc) / n
+    passing = prec >= gamma
+    any_pass = jnp.any(passing)
+    j = jnp.where(any_pass,
+                  (a_desc.shape[0] - 1) - jnp.argmax(passing[::-1]), 0)
+    tau = jnp.where(any_pass, a_desc[j], jnp.inf)
+    return ThresholdResult(tau, jnp.float32(gamma), jnp.int32(a_desc.shape[0]),
+                           any_pass)
+
+
+@functools.partial(jax.jit, static_argnames=("min_step",))
+def tau_ci_p(a_s, o_s, gamma, delta, m_s=None, min_step=MIN_STEP):
+    """Algorithm 3 (and stage 2 of Algorithm 5): CI precision threshold.
+
+    With m_s=None the sample is treated as uniform over its population (the
+    paper's printed Algorithm 3/5 form, plain O-values). With explicit
+    reweighting factors m_s, the scan uses the importance-weighted ratio
+    estimator (Eq. 12) with conservative numerator/denominator bounds.
+    """
+    a_s = jnp.asarray(a_s, jnp.float32)
+    o_s = jnp.asarray(o_s, jnp.float32)
+    if m_s is None:
+        a_desc, o_desc = _sort_desc(a_s, o_s)
+        w_desc = jnp.ones_like(a_desc)
+    else:
+        a_desc, o_desc, w_desc = _sort_desc(a_s, o_s,
+                                            jnp.asarray(m_s, jnp.float32))
+    tau, num_cand, ok = _precision_candidate_scan(
+        a_desc, o_desc, w_desc, gamma, delta, min_step)
+    return ThresholdResult(tau, jnp.float32(gamma), num_cand, ok)
+
+
+@jax.jit
+def pt_stage1_nmatch(o_s0, m_s0, n_total, gamma, delta):
+    """Stage 1 of Algorithm 5: UB on n_match and the D' cutoff rank.
+
+    Z = {O(x) m(x)}; n_match = |D| * UB(mu_Z, sigma_Z, s/2, delta/2). Records
+    below the n_match/gamma-th highest proxy score cannot reach precision
+    gamma and are excluded from stage-2 sampling.
+    """
+    z = jnp.asarray(o_s0, jnp.float32) * jnp.asarray(m_s0, jnp.float32)
+    mu, sg = bounds.sample_mean_std(z)
+    n_match = n_total * bounds.ub(mu, sg, z.shape[0], delta / 2.0)
+    n_match = jnp.clip(n_match, 1.0, n_total)
+    rank = jnp.clip(jnp.ceil(n_match / gamma), 1.0, n_total).astype(jnp.int32)
+    return n_match, rank
+
+
+def dprime_cutoff_score(scores, rank):
+    """tau such that |{A >= tau}| ~= rank, via a global top-k rank lookup.
+
+    Exact single-host path (jnp.sort). The distributed path approximates the
+    same rank from the binned sketch (see binned.py).
+    """
+    desc = jnp.sort(jnp.asarray(scores, jnp.float32))[::-1]
+    idx = jnp.clip(rank - 1, 0, desc.shape[0] - 1)
+    return desc[idx]

@@ -1,0 +1,106 @@
+"""Deterministic, sharded, resumable data pipeline.
+
+Production posture:
+  * every batch is a pure function of (seed, step) — restart at step k
+    reproduces exactly the stream a failed run would have seen (the
+    checkpoint only needs to store the step counter, no iterator state);
+  * each data-parallel host reads only its shard of the global batch
+    (shard_index / num_shards), so ingest bandwidth scales with the fleet;
+  * a background prefetch thread keeps `depth` batches ready so host-side
+    generation overlaps device compute (the standard single-host overlap);
+  * record stores for the selection plane are memory-mapped score arrays
+    (np.memmap) so a 1e9-score corpus never fully materializes in RAM.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import numpy as np
+
+
+class DeterministicSource:
+    """Batch source: batch = f(seed, step), sharded across hosts."""
+
+    def __init__(self, make_batch: Callable[[np.random.Generator, int], dict],
+                 seed: int, shard_index: int = 0, num_shards: int = 1):
+        self._make = make_batch
+        self.seed = seed
+        self.shard_index = shard_index
+        self.num_shards = num_shards
+
+    def batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        full = self._make(rng, step)
+        return {k: v[self.shard_index::self.num_shards]
+                for k, v in full.items()}
+
+    def iter_from(self, start_step: int) -> Iterator[dict]:
+        step = start_step
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class Prefetcher:
+    """Background-thread prefetch of a batch iterator (depth-bounded)."""
+
+    _SENTINEL = object()
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._err: Optional[BaseException] = None
+
+        def run():
+            try:
+                for item in it:
+                    self._q.put(item)
+            except BaseException as e:  # noqa: BLE001 — surfaced on get
+                self._err = e
+            finally:
+                self._q.put(self._SENTINEL)
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._SENTINEL:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+
+class ScoreStore:
+    """Memory-mapped proxy-score shard store for the selection plane.
+
+    Layout: one float32 array per shard on disk. Writers are the serve
+    plane's scoring jobs; readers are SUPG queries and the sketch kernel.
+    """
+
+    def __init__(self, path, num_records: int, mode="r+", create=False):
+        self.path = str(path)
+        if create:
+            self._arr = np.memmap(self.path, np.float32, "w+",
+                                  shape=(num_records,))
+            self._arr[:] = -1.0   # unscored marker
+        else:
+            self._arr = np.memmap(self.path, np.float32, mode,
+                                  shape=(num_records,))
+
+    def write(self, start: int, scores: np.ndarray):
+        self._arr[start:start + scores.shape[0]] = scores
+        self._arr.flush()
+
+    def read(self, start: int = 0, count: Optional[int] = None) -> np.ndarray:
+        end = None if count is None else start + count
+        return np.asarray(self._arr[start:end])
+
+    @property
+    def num_scored(self) -> int:
+        return int((self._arr >= 0).sum())

@@ -1,0 +1,123 @@
+"""Synthetic datasets — the paper's Beta benchmarks and LM token corpora.
+
+Beta datasets (Table 2): proxy scores A(x) ~ Beta(alpha, beta), oracle
+labels O(x) ~ Bernoulli(A(x)) — a perfectly calibrated proxy whose sharpness
+and positive rate are controlled by (alpha, beta). The paper's pairs:
+(0.01, 1) with TPR ~0.5-1% and (0.01, 2) with TPR ~1%; the imbalance sweep
+(Fig 10) uses beta in {0.125, ..., 2.0}.
+
+Noise / drift variants (Fig 9, Table 3): additive Gaussian proxy noise
+clipped to [0,1], and shifted-parameter datasets for the drift experiments.
+
+LM corpora: deterministic synthetic token streams with a planted "event"
+structure so the selection service has a learnable predicate: sequences
+containing a marker n-gram are positives; the oracle checks the marker
+exactly and the proxy model is trained to detect it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class BetaDataset:
+    scores: np.ndarray       # A(x), float32 in [0,1]
+    labels: np.ndarray       # O(x), float32 {0,1}
+    alpha: float
+    beta: float
+
+    @property
+    def tpr(self) -> float:
+        return float(self.labels.mean())
+
+    def truth_mask(self) -> np.ndarray:
+        return self.labels > 0.5
+
+
+def make_beta(n=1_000_000, alpha=0.01, beta=1.0, seed=0,
+              noise_std=0.0) -> BetaDataset:
+    rng = np.random.default_rng(seed)
+    probs = rng.beta(alpha, beta, n).astype(np.float32)
+    labels = (rng.random(n) < probs).astype(np.float32)
+    scores = probs
+    if noise_std > 0:
+        scores = np.clip(probs + rng.normal(0, noise_std, n)
+                         .astype(np.float32), 0.0, 1.0)
+    return BetaDataset(scores=scores, labels=labels, alpha=alpha, beta=beta)
+
+
+def make_drift_pair(n=1_000_000, seed=0):
+    """(train, shifted) Beta datasets — Table 3's synthetic drift row."""
+    return (make_beta(n, 0.01, 1.0, seed=seed),
+            make_beta(n, 0.01, 2.0, seed=seed + 1))
+
+
+def make_miscalibrated(n=1_000_000, alpha=0.01, beta=1.0, seed=0,
+                       temperature=3.0):
+    """Proxy that is *correlated but miscalibrated* (sharpened scores):
+    used by robustness tests — guarantees must hold anyway."""
+    rng = np.random.default_rng(seed)
+    probs = rng.beta(alpha, beta, n).astype(np.float32)
+    labels = (rng.random(n) < probs).astype(np.float32)
+    scores = probs ** (1.0 / temperature)
+    return BetaDataset(scores=scores, labels=labels, alpha=alpha, beta=beta)
+
+
+def make_adversarial(n=100_000, tpr=0.01, seed=0):
+    """Anti-correlated proxy: high scores on negatives. Defensive mixing
+    must still deliver validity (quality will be poor — that's expected)."""
+    rng = np.random.default_rng(seed)
+    labels = (rng.random(n) < tpr).astype(np.float32)
+    scores = np.where(labels > 0.5,
+                      rng.beta(1, 20, n), rng.beta(20, 1, n)).astype(
+                          np.float32)
+    return BetaDataset(scores=scores, labels=labels, alpha=0, beta=0)
+
+
+# ---------------------------------------------------------------------------
+# Token corpora for the LM planes
+# ---------------------------------------------------------------------------
+
+MARKER = (7, 13, 42)   # planted n-gram; sequences containing it match
+
+
+def make_token_corpus(num_records=4096, seq_len=128, vocab=128,
+                      positive_rate=0.05, seed=0):
+    """Deterministic synthetic corpus with planted positives.
+
+    Returns (tokens (N, S) int32, labels (N,) float32). A record is positive
+    iff the marker tri-gram occurs; the oracle is exact marker matching (the
+    ground truth), the proxy is a trained model's confidence.
+    """
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(0, vocab, (num_records, seq_len), dtype=np.int32)
+    # stamp the marker into a random subset at random offsets
+    n_pos = int(num_records * positive_rate)
+    pos_idx = rng.choice(num_records, n_pos, replace=False)
+    offs = rng.integers(0, seq_len - len(MARKER), n_pos)
+    for i, off in zip(pos_idx, offs):
+        tokens[i, off:off + len(MARKER)] = MARKER
+    labels = contains_marker(tokens).astype(np.float32)
+    return tokens, labels
+
+
+def contains_marker(tokens) -> np.ndarray:
+    """Exact oracle predicate: does the marker tri-gram occur?"""
+    t = np.asarray(tokens)
+    hits = np.zeros(t.shape[0], bool)
+    for off in range(t.shape[1] - len(MARKER) + 1):
+        window = t[:, off:off + len(MARKER)]
+        hits |= (window == np.asarray(MARKER)).all(axis=1)
+    return hits
+
+
+def lm_batches(key_seed, num_steps, global_batch, seq_len, vocab,
+               start_step=0):
+    """Deterministic next-token-prediction batches (resumable by step)."""
+    for step in range(start_step, num_steps):
+        rng = np.random.default_rng((key_seed, step))
+        toks = rng.integers(0, vocab, (global_batch, seq_len + 1),
+                            dtype=np.int32)
+        yield {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

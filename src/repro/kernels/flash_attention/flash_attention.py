@@ -1,0 +1,114 @@
+"""Flash attention (causal, GQA) — Pallas TPU kernel.
+
+Grid (B, H, nQ, nK): the two outer axes parallelize over batch and query
+heads; the inner two walk query/key blocks. TPU grids execute sequentially
+per core, so the (m, l, acc) online-softmax state lives in VMEM scratch and
+persists across the nK axis; output is written once at the last visited K
+block for each Q block.
+
+VMEM working set per step (block_q = block_k = 512, dh = 128, fp32):
+  q (512x128) + k (512x128) + v (512x128) + scores (512x512) + acc (512x128)
+  ~ 2.3 MB  << 16 MB VMEM/core; block sizes are multiples of the 128-lane
+MXU tile so every matmul maps onto full systolic passes.
+
+Causality: K blocks strictly above the diagonal are skipped via pl.when
+(no MXU work issued, unlike the masked-but-executed jnp fallback).
+GQA: the K/V BlockSpec index_map folds q-head h onto kv-head h // group.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  sm_scale, block_q, block_k, causal):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Causal block skip: K block strictly after the Q block contributes
+    # nothing — issue no compute at all.
+    diag_ok = (qi * block_q >= ki * block_k) if causal else True
+
+    @pl.when(diag_ok)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)        # (block_q, dh)
+        k = k_ref[0, 0].astype(jnp.float32)        # (block_k, dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            k_pos = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, block_q=512, block_k=512,
+                    interpret=False):
+    """q: (B,H,S,dh); k/v: (B,KV,S,dh) with H % KV == 0 -> (B,H,S,dh)."""
+    b, h, s, dh = q.shape
+    kv = k.shape[1]
+    group = h // kv
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0
+    sm_scale = 1.0 / (dh ** 0.5)
+
+    grid = (b, h, s // block_q, s // block_k)
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=sm_scale, block_q=block_q, block_k=block_k,
+        causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,32 @@
+"""Jit'd public wrapper for the flash attention kernel.
+
+`flash_attention(q, k, v)` accepts (B, S, H, dh)-layout tensors (the model
+stack's convention), transposes to the kernel's (B, H, S, dh) layout, and
+dispatches to the Pallas kernel (interpret=True on CPU) or the jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention as _kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "backend", "block_q",
+                                             "block_k"))
+def flash_attention(q, k, v, *, causal=True, backend="interpret",
+                    block_q=512, block_k=512):
+    """q: (B,S,H,dh); k/v: (B,S,KV,dh) -> (B,S,H,dh)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if backend == "ref":
+        ot = ref.attention_ref(qt, kt, vt, causal=causal)
+    else:
+        ot = _kernel(qt, kt, vt, causal=causal, block_q=block_q,
+                     block_k=block_k, interpret=(backend == "interpret"))
+    return ot.transpose(0, 2, 1, 3)

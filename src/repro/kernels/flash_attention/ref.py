@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal=True):
+    """q: (B,H,S,dh); k/v: (B,KV,S,dh). Naive softmax attention, fp32."""
+    b, h, s, dh = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    qg = q.reshape(b, kv, g, s, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgqd,bkpd->bkgqp", qg, kf) / (dh ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgqp,bkpd->bkgqd", p, vf)
+    return o.reshape(b, h, s, dh).astype(q.dtype)

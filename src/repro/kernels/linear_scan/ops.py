@@ -1,0 +1,18 @@
+"""Jit'd public wrapper for the chunked linear scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.linear_scan import ref
+from repro.kernels.linear_scan.linear_scan import linear_scan as _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "chunk"))
+def linear_scan(q, k, v, w, u=None, *, backend="interpret", chunk=128):
+    """Dispatch: 'interpret' (Pallas on CPU), 'tpu' (Pallas compiled), 'ref'."""
+    if backend == "ref":
+        return ref.linear_scan_ref(q, k, v, w, u)
+    return _kernel(q, k, v, w, u, chunk=chunk, bonus=u is not None,
+                   interpret=(backend == "interpret"))

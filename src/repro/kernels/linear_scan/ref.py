@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the linear scan kernel: exact step-by-step recurrence."""
+from repro.models.scan_ops import linear_scan_recurrent
+
+
+def linear_scan_ref(q, k, v, w, u=None):
+    """Exact recurrence (jax.lax.scan over time). Returns (o, final_state)."""
+    return linear_scan_recurrent(q, k, v, w, u)

@@ -1,0 +1,18 @@
+"""Jit'd public wrapper for the fused score sketch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.score_hist import ref
+from repro.kernels.score_hist.score_hist import score_hist as _kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_bins", "backend", "block_n"))
+def score_hist(scores, num_bins=4096, *, backend="interpret", block_n=2048):
+    if backend == "ref":
+        return ref.score_hist_ref(scores, num_bins)
+    return _kernel(scores, num_bins=num_bins, block_n=block_n,
+                   interpret=(backend == "interpret"))

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused score sketch (scatter-add formulation)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def score_hist_ref(scores, num_bins=4096):
+    scores = jnp.asarray(scores, jnp.float32)
+    valid = scores >= 0.0
+    a = jnp.clip(scores, 0.0, 1.0)
+    ids = jnp.minimum((a * num_bins).astype(jnp.int32), num_bins - 1)
+    vm = valid.astype(jnp.float32)
+    counts = jnp.zeros(num_bins, jnp.float32).at[ids].add(vm)
+    sum_w = jnp.zeros(num_bins, jnp.float32).at[ids].add(jnp.sqrt(a) * vm)
+    sum_a = jnp.zeros(num_bins, jnp.float32).at[ids].add(a * vm)
+    return counts, sum_w, sum_a

@@ -1,0 +1,320 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST precede every other import — jax locks the
+# device count at first initialization. Hence no `from __future__` here.
+
+DOC = """Multi-pod dry-run: prove the distribution config is coherent for every
+(architecture x input shape) cell on the production meshes.
+
+For each cell this driver:
+  1. lowers + compiles the full config (scan-over-layers keeps the HLO depth-
+     independent) on the single-pod (16,16) mesh AND the 2-pod (2,16,16)
+     mesh — success proves the shardings, the collectives, and (via
+     memory_analysis) that the per-device buffers fit;
+  2. compiles width-preserved reduced-depth variants (1 and 2 repeating
+     units) whose cost_analysis difference gives exact per-unit HLO FLOPs /
+     bytes / collective-bytes — XLA's cost model does NOT multiply while-
+     loop bodies by trip count, so the full-graph numbers must be
+     reconstructed as  F(total) = F(L1) + (units_total - units_L1) * dF;
+  3. parses collective operations (all-gather / all-reduce / reduce-scatter /
+     all-to-all / collective-permute) with result byte-sizes and replica
+     group sizes out of the compiled HLO;
+  4. appends everything to results/dryrun.json (incremental — safe to
+     restart; finished cells are skipped).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch ID] [--shape NAME]
+      [--mesh single|multi|both] [--out results/dryrun.json] [--skip-full]
+"""
+
+import argparse
+import functools
+import json
+import pathlib
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_IDS, SHAPES, get_config, shape_applicable)
+from repro.launch import serve as servelib
+from repro.launch import train as trainlib
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as modellib
+from repro.models.meshctx import mesh_context
+from repro.optim import adamw
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\]))\S*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64)"
+                       r"\[([\d,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def parse_collectives(hlo_text):
+    """Sum result bytes per collective kind, bucketed by replica-group size."""
+    out = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        shapes_blob, kind = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(shapes_blob):
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        g = _GROUP_RE.search(line)
+        gsize = int(g.group(2)) if g else 0
+        key = f"{kind}/g{gsize}"
+        ent = out.setdefault(key, {"count": 0, "bytes": 0})
+        ent["count"] += 1
+        ent["bytes"] += nbytes
+    return out
+
+
+def reduced_config(cfg, units):
+    """Width-preserved config with `units` repeating units, layers unrolled
+    so cost_analysis sees every layer (see DESIGN.md §Roofline method)."""
+    import dataclasses
+    cfg = dataclasses.replace(cfg, unroll_layers=True, remat="none")
+    if cfg.block == "mamba" and cfg.shared_attn_every:
+        return dataclasses.replace(
+            cfg, num_layers=units * cfg.shared_attn_every)
+    if cfg.moe and cfg.moe_layer_step > 1:
+        return dataclasses.replace(
+            cfg, num_layers=units * cfg.moe_layer_step)
+    if cfg.moe and cfg.first_k_dense:
+        return dataclasses.replace(
+            cfg, num_layers=cfg.first_k_dense + units)
+    return dataclasses.replace(cfg, num_layers=units)
+
+
+def unit_counts(cfg):
+    """(units_total, units_in_reduced_1) for the extrapolation formula."""
+    if cfg.block == "mamba" and cfg.shared_attn_every:
+        return cfg.num_layers / cfg.shared_attn_every, 1
+    if cfg.moe and cfg.moe_layer_step > 1:
+        return cfg.num_layers // cfg.moe_layer_step, 1
+    if cfg.moe and cfg.first_k_dense:
+        return cfg.num_layers - cfg.first_k_dense, 1
+    return cfg.num_layers, 1
+
+
+def _cost_dict(compiled):
+    ca = compiled.cost_analysis()
+    if not isinstance(ca, dict):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def _mem_dict(compiled):
+    ma = compiled.memory_analysis()
+    return {k: int(getattr(ma, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "alias_size_in_bytes",
+             "generated_code_size_in_bytes")}
+
+
+def _fsdp_needed(cfg, mesh):
+    """TP-16 alone must leave headroom on 16 GB HBM; otherwise FSDP."""
+    from repro.models.model import count_params_analytic
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    return count_params_analytic(cfg) * 2 / tp > 12e9
+
+
+def lower_cell(cfg, shape, mesh, donate=True, grad_accum=8):
+    """Build and lower the step function for one cell. Returns `lowered`."""
+    import dataclasses as _dc
+    if shape.kind == "train" and cfg.train_parallelism == "dp":
+        # pure-DP training: the model axis carries batch — model-axis
+        # activation constraints (vocab sharding, CP attention) must be off
+        cfg = _dc.replace(cfg, shard_activations=False)
+    params = jax.eval_shape(functools.partial(modellib.init, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    fsdp = _fsdp_needed(cfg, mesh)
+    if shape.kind == "train":
+        if cfg.train_parallelism == "dp":
+            grad_accum = 1   # batch already spread over every device
+        step = trainlib.make_train_step(
+            cfg, trainlib.TrainOptions(grad_accum=grad_accum))
+        opt = jax.eval_shape(adamw.init, params)
+        batch = trainlib.input_specs_train(cfg, shape)
+        in_sh, out_sh = trainlib.shardings_for_train(
+            cfg, params, opt, mesh, fsdp=fsdp,
+            batch_size=shape.global_batch)
+        fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=(0, 1) if donate else ())
+        return fn.lower(params, opt, batch)
+    if shape.kind == "prefill":
+        step = servelib.make_serve_prefill(cfg)
+        batch = servelib.input_specs_prefill(cfg, shape)
+        in_sh, out_sh = servelib.shardings_for_serve(cfg, params, mesh,
+                                                     shape, "prefill",
+                                                     fsdp=fsdp)
+        fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+        return fn.lower(params, batch)
+    # decode
+    step = servelib.make_serve_decode(cfg)
+    batch = servelib.input_specs_decode(cfg, shape)
+    caches = servelib.cache_specs_struct(cfg, shape)
+    in_sh, out_sh = servelib.shardings_for_serve(cfg, params, mesh, shape,
+                                                 "decode", fsdp=fsdp)
+    fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                 donate_argnums=(2,) if donate else ())
+    return fn.lower(params, batch, caches)
+
+
+def run_cell(arch, shape, mesh, mesh_name, *, skip_full=False,
+             with_reduced=True):
+    import dataclasses
+    cfg = dataclasses.replace(get_config(arch), shard_activations=True)
+    rec = {"arch": arch, "shape": shape.name, "mesh": mesh_name,
+           "kind": shape.kind, "ok": False}
+    t0 = time.time()
+    try:
+        if not skip_full:
+            with mesh_context(mesh):
+                lowered = lower_cell(cfg, shape, mesh)
+                compiled = lowered.compile()
+            rec["memory"] = _mem_dict(compiled)
+            rec["full_cost_raw"] = _cost_dict(compiled)
+            del lowered, compiled
+
+        if with_reduced:
+            units_total, u1 = unit_counts(cfg)
+            c1 = reduced_config(cfg, 1)
+            c2 = reduced_config(cfg, 2)
+            costs, colls = [], []
+            for c in (c1, c2):
+                with mesh_context(mesh):
+                    # accum=1: microbatch scan bodies are cost-counted once
+                    # by XLA, so probes must run the whole batch in one shot
+                    lo = lower_cell(c, shape, mesh, donate=False,
+                                    grad_accum=1)
+                    comp = lo.compile()
+                costs.append(_cost_dict(comp))
+                colls.append(parse_collectives(comp.as_text()))
+                del lo, comp
+            d_flops = costs[1]["flops"] - costs[0]["flops"]
+            d_bytes = costs[1]["bytes"] - costs[0]["bytes"]
+            extra_units = units_total - u1
+            rec["hlo_flops_per_device"] = costs[0]["flops"] \
+                + extra_units * d_flops
+            rec["hlo_bytes_per_device"] = costs[0]["bytes"] \
+                + extra_units * d_bytes
+            rec["unit_costs"] = {"c1": costs[0], "c2": costs[1],
+                                 "units_total": units_total}
+            # collective bytes: per-kind extrapolation
+            coll_total = {}
+            keys = set(colls[0]) | set(colls[1])
+            for k in keys:
+                b1 = colls[0].get(k, {"bytes": 0})["bytes"]
+                b2 = colls[1].get(k, {"bytes": 0})["bytes"]
+                n1 = colls[0].get(k, {"count": 0})["count"]
+                n2 = colls[1].get(k, {"count": 0})["count"]
+                coll_total[k] = {
+                    "bytes": b1 + extra_units * (b2 - b1),
+                    "count": n1 + extra_units * (n2 - n1),
+                }
+            rec["collectives"] = coll_total
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec["error"] = f"{type(e).__name__}: {str(e)[:500]}"
+    rec["elapsed_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--skip-full", action="store_true",
+                    help="only reduced-depth roofline compiles")
+    ap.add_argument("--no-reduced", action="store_true")
+    ap.add_argument("--redo-reduced", action="store_true",
+                    help="refresh the reduced-depth cost probes of finished "
+                         "cells, keeping their memory-fit records")
+    args = ap.parse_args()
+
+    out_path = pathlib.Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    results = []
+    done = set()
+    if out_path.exists():
+        results = json.loads(out_path.read_text())
+        done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+                if r.get("ok")}
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh()))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16",
+                       make_production_mesh(multi_pod=True)))
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [s for s in SHAPES if args.shape is None or
+              s.name == args.shape]
+
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes:
+            ok, why = shape_applicable(cfg, shape)
+            for mesh_name, mesh in meshes:
+                key = (arch, shape.name, mesh_name)
+                if key in done and not args.redo_reduced:
+                    continue
+                if key in done and args.redo_reduced:
+                    old = next(r for r in results
+                               if (r["arch"], r["shape"], r["mesh"]) == key)
+                    if old.get("skipped") or not mesh_name.startswith(
+                            "single") or "unit_costs" not in old:
+                        continue
+                    print(f"[dryrun:redo] {arch} x {shape.name}", flush=True)
+                    rec = run_cell(arch, shape, mesh, mesh_name,
+                                   skip_full=True, with_reduced=True)
+                    rec["memory"] = old.get("memory")
+                    rec["full_cost_raw"] = old.get("full_cost_raw")
+                    results = [r for r in results
+                               if (r["arch"], r["shape"], r["mesh"]) != key]
+                    results.append(rec)
+                    out_path.write_text(json.dumps(results, indent=1))
+                    continue
+                if not ok:
+                    rec = {"arch": arch, "shape": shape.name,
+                           "mesh": mesh_name, "ok": True, "skipped": why}
+                else:
+                    print(f"[dryrun] {arch} x {shape.name} x {mesh_name}",
+                          flush=True)
+                    rec = run_cell(
+                        arch, shape, mesh, mesh_name,
+                        skip_full=args.skip_full,
+                        with_reduced=(not args.no_reduced
+                                      and mesh_name.startswith("single")))
+                    status = "OK" if rec["ok"] else \
+                        f"FAIL {rec.get('error', '')[:120]}"
+                    print(f"    -> {status} ({rec.get('elapsed_s', 0)}s)",
+                          flush=True)
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r["mesh"]) != key]
+                results.append(rec)
+                out_path.write_text(json.dumps(results, indent=1))
+    n_ok = sum(r["ok"] for r in results)
+    print(f"[dryrun] {n_ok}/{len(results)} cells OK -> {out_path}")
+
+
+if __name__ == "__main__":
+    main()

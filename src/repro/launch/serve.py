@@ -1,0 +1,73 @@
+"""Distributed serving: batched proxy scoring (prefill) and decode steps.
+
+The SUPG pipeline's proxy plane: `serve_prefill` maps a batch of records
+(token streams) to proxy scores A(x) in [0,1]; `serve_decode` advances one
+token against KV/state caches (the decode_32k / long_500k shapes). Both are
+pure functions lowered by the dry-run and executed by
+examples/selection_service.py on small configs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import sharding as shardlib
+from repro.models import model as modellib
+
+
+def make_serve_prefill(cfg, target_token=1):
+    def serve_prefill(params, batch):
+        return modellib.proxy_scores(params, cfg, batch["tokens"],
+                                     target_token)
+    return serve_prefill
+
+
+def make_serve_decode(cfg):
+    def serve_decode(params, batch, caches):
+        logits, new_caches = modellib.apply_decode(
+            params, cfg, batch["tokens"], caches, batch["pos"])
+        return logits, new_caches
+    return serve_decode
+
+
+def input_specs_prefill(cfg, shape):
+    b, s = shape.global_batch, shape.seq_len
+    tok_shape = (b, s, cfg.num_codebooks) if cfg.num_codebooks > 1 else (b, s)
+    return {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32)}
+
+
+def input_specs_decode(cfg, shape):
+    b = shape.global_batch
+    tok_shape = (b, 1, cfg.num_codebooks) if cfg.num_codebooks > 1 else (b, 1)
+    return {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32),
+            "pos": jax.ShapeDtypeStruct((b,), jnp.int32)}
+
+
+def cache_specs_struct(cfg, shape, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree for decode caches (no allocation)."""
+    caches = jax.eval_shape(
+        lambda: modellib.init_caches(cfg, shape.global_batch, shape.seq_len,
+                                     dtype))
+    return caches
+
+
+def shardings_for_serve(cfg, params, mesh, shape, kind, dtype=jnp.bfloat16,
+                        fsdp=False):
+    pspecs = shardlib.param_shardings(cfg, params, mesh, fsdp=fsdp)
+    b = shape.global_batch
+    extra = 2 if cfg.num_codebooks > 1 else 1
+    bspec = NamedSharding(mesh, shardlib.batch_spec(mesh, extra, batch=b))
+    if kind == "prefill":
+        batch_shard = {"tokens": bspec}
+        return (pspecs, batch_shard), None
+    cache_struct = cache_specs_struct(cfg, shape, dtype)
+    cspecs = shardlib.cache_specs(cfg, cache_struct, mesh,
+                                  shape.global_batch)
+    c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs)
+    batch_shard = {"tokens": bspec,
+                   "pos": NamedSharding(mesh,
+                                        shardlib.batch_spec(mesh, 0, batch=b))}
+    return (pspecs, batch_shard, c_shard), (None, c_shard)

@@ -1,0 +1,247 @@
+"""Parameter / activation PartitionSpecs — the TP/EP/DP layout rules.
+
+`param_specs(cfg, params, mesh)` walks the parameter pytree and assigns a
+PartitionSpec by (path, shape) pattern — the MaxText "logical axis rules"
+approach, collapsed to the patterns this model zoo actually produces:
+
+  embedding table (V, d)           -> vocab-sharded  ("model", None)
+  column-parallel producers        -> last dim "model"   (wq/wk/wv/w_gate/...)
+  row-parallel consumers           -> first matrix dim "model" (wo/w_down/...)
+  MoE expert stacks (E, d, ff)     -> expert-parallel: E over "model"
+  MLA latent down-projections      -> replicated (tiny, avoids resharding)
+  norms / biases-1D / scalars      -> replicated
+
+Every rule is divisibility-checked against the mesh (jax rejects uneven
+explicit shardings); non-divisible dims fall back to replication on that
+dim. Data parallelism is expressed on the batch dim of inputs; gradients
+reduce over ("pod","data") via pjit's partitioner.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+# leaf names (last path component) -> role
+_COLUMN = {"wq", "wk", "wv", "wg", "wr", "w_gate", "w_up", "cm_wk", "cm_wr",
+           "w_uq", "w_uk", "w_uv", "maa_w1", "wd1"}
+_ROW = {"wo", "w_down", "cm_wv", "out_proj", "w"}
+_REPLICATED = {"router", "w_dq", "w_dkv", "in_proj", "conv_w", "conv_b",
+               "maa_w2", "wd2"}
+_BIAS_MODEL = {"bq", "bk", "bv"}
+
+
+def _path_names(path):
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(p.key)
+        elif hasattr(p, "name"):
+            out.append(p.name)
+    return out
+
+
+def _check(spec, shape, mesh):
+    """Drop mesh axes that do not divide the corresponding dim."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    fixed = []
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            fixed.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        fixed.append(entry if dim % total == 0 else None)
+    return P(*fixed)
+
+
+def _leaf_spec(names, shape, cfg):
+    """PartitionSpec pattern for one leaf. Leading stack axes (scan-layer,
+    expert, codebook, superblock) are recognized by rank surplus."""
+    name = names[-1]
+    rank = len(shape)
+
+    if name == "table":                       # embedding (maybe (K,) V, d)
+        base = ("model", None)
+        lead = rank - 2
+        return P(*([None] * lead + list(base)))
+    if name == "scale" or rank <= 1:
+        if name in _BIAS_MODEL and rank >= 1:
+            return P(*([None] * (rank - 1) + ["model"]))
+        return P(*([None] * rank))
+    if name in _BIAS_MODEL:
+        return P(*([None] * (rank - 1) + ["model"]))
+    if "moe" in names and name in ("w_gate", "w_up", "w_down"):
+        # expert stack: (L?, E, d, ff) -> EP on E
+        lead = rank - 3
+        return P(*([None] * lead + ["model", None, None]))
+    if name == "w" and "head" in names:       # LM head (maybe (K,) d, V)
+        lead = rank - 2
+        return P(*([None] * lead + [None, "model"]))
+    if name in _COLUMN:
+        return P(*([None] * (rank - 1) + ["model"]))
+    if name in _ROW:
+        return P(*([None] * (rank - 2) + ["model", None]))
+    if name in _REPLICATED:
+        return P(*([None] * rank))
+    return P(*([None] * rank))
+
+
+_FSDP_MIN_ELEMS = 1 << 22  # 4M — don't bother FSDP-sharding small leaves
+
+
+def param_specs(cfg, params, mesh, fsdp=False, strategy="tp"):
+    """TP/EP specs; with fsdp=True additionally shard big leaves over the
+    data axes (ZeRO-3 / FSDP — GSPMD all-gathers each layer's weights at
+    use inside the scan). Required for the 236B/400B configs: TP-16 alone
+    leaves ~29 GB of bf16 params per device.
+
+    strategy="dp": pure ZeRO-3 — no "model"-axis tensor parallelism at all;
+    every big leaf is sharded over ALL mesh axes on its largest divisible
+    dim and gathered at use. Right for small / attention-free archs whose
+    activation TP would pay tens of full-activation collectives per layer
+    (§Perf iteration 3)."""
+    dp = data_axes(mesh)
+    lead = dp if len(dp) > 1 else dp[0]
+    all_axes = tuple(mesh.axis_names)
+
+    def assign(path, leaf):
+        names = _path_names(path)
+        if strategy == "dp":
+            if leaf.ndim < 1 or leaf.size < (1 << 16):
+                return P(*([None] * leaf.ndim))
+            for _, i in sorted(((leaf.shape[i], i)
+                                for i in range(leaf.ndim)), reverse=True):
+                trial = [None] * leaf.ndim
+                trial[i] = all_axes
+                fixed = _check(P(*trial), leaf.shape, mesh)
+                if fixed[i] is not None:
+                    return fixed
+            return P(*([None] * leaf.ndim))
+        spec = _check(_leaf_spec(names, leaf.shape, cfg), leaf.shape, mesh)
+        if fsdp and leaf.ndim >= 2 and leaf.size >= _FSDP_MIN_ELEMS:
+            entries = list(spec)
+            cand = [(leaf.shape[i], i) for i, e in enumerate(entries)
+                    if e is None]
+            for _, i in sorted(cand, reverse=True):
+                trial = list(entries)
+                trial[i] = lead
+                fixed = _check(P(*trial), leaf.shape, mesh)
+                if fixed[i] is not None:
+                    return fixed
+        return spec
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def param_shardings(cfg, params, mesh, fsdp=False):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, params, mesh, fsdp=fsdp))
+
+
+def zero1_specs(cfg, params, mesh, fsdp=False):
+    """Optimizer-state specs: param spec + data-axis sharding on the largest
+    dim not already sharded (ZeRO-1). Falls back to the param spec."""
+    dp = data_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_total = 1
+    for a in dp:
+        dp_total *= sizes[a]
+
+    def extend(spec, leaf):
+        if leaf.ndim < 2:
+            return spec
+        entries = list(spec)
+        used = set()
+        for e in entries:
+            if e is None:
+                continue
+            used.update(e if isinstance(e, tuple) else (e,))
+        if used & set(dp):       # already data-sharded (FSDP) — nothing to add
+            return spec
+        # largest unsharded dim divisible by the dp size
+        cand = [(leaf.shape[i], i) for i, e in enumerate(entries)
+                if e is None and leaf.shape[i] % dp_total == 0]
+        if not cand:
+            return spec
+        _, i = max(cand)
+        entries[i] = dp if len(dp) > 1 else dp[0]
+        return P(*entries)
+
+    return jax.tree.map(extend, param_specs(cfg, params, mesh, fsdp=fsdp),
+                        params)
+
+
+# ---------------------------------------------------------------------------
+# Input / activation / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_spec(mesh, extra_dims=1, batch=None, axes="data"):
+    """(B, ...) sharded over the data axes (or ALL axes for the pure-DP
+    training strategy). With `batch` given, cascades to smaller axis sets
+    when B doesn't divide (long_500k's global_batch=1 ends replicated)."""
+    dp = data_axes(mesh)
+    candidates = []
+    if axes == "all":
+        candidates.append(tuple(mesh.axis_names))
+    candidates.append(dp if len(dp) > 1 else dp[0])
+    if len(dp) > 1:
+        candidates.append(dp[-1])
+    for lead in candidates:
+        spec = P(*([lead] + [None] * extra_dims))
+        if batch is None:
+            return spec
+        fixed = _check(spec, (batch,) + (1,) * extra_dims, mesh)
+        if fixed[0] is not None:
+            return fixed
+    return P(*([None] * (1 + extra_dims)))
+
+
+def cache_specs(cfg, caches, mesh, batch):
+    """Decode caches: batch-sharded over data axes; KV-head dim over 'model'
+    when divisible (GQA kv >= 16) else replicated on that dim."""
+    dp = data_axes(mesh)
+    lead = dp if len(dp) > 1 else dp[0]
+
+    def assign(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        rank = len(shape)
+        name = names[-1]
+        if name in ("k", "v") and rank >= 4:        # (L?, B, S, KV, hd)
+            lead_n = rank - 4
+            spec = _check(P(*([None] * lead_n + [lead, None, "model", None])),
+                          shape, mesh)
+            if spec[lead_n + 2] is None:
+                # KV heads don't divide the model axis (GQA kv < 16):
+                # flash-decode layout — shard the cache *sequence* instead;
+                # the partial-softmax combine is GSPMD's to emit.
+                spec = _check(
+                    P(*([None] * lead_n + [lead, "model", None, None])),
+                    shape, mesh)
+            return spec
+        if name in ("c", "k_rope") and rank >= 3:   # MLA latent (L?, B, S, r)
+            lead_n = rank - 3
+            return _check(P(*([None] * lead_n + [lead, "model", None])),
+                          shape, mesh)
+        if name in ("wkv", "ssm") and rank >= 4:    # (L?, B, H, dk, dv)
+            lead_n = rank - 4
+            spec = [None] * lead_n + [lead, "model", None, None]
+            return _check(P(*spec), shape, mesh)
+        # shift / conv states (L?, B, ...): shard the first dim whose extent
+        # equals the batch size (stack prefixes are layer counts).
+        spec = [None] * rank
+        for i, d in enumerate(shape):
+            if d == batch:
+                cand = _check(
+                    P(*([None] * i + [lead] + [None] * (rank - i - 1))),
+                    shape, mesh)
+                if cand[i] is not None:
+                    spec = list(cand)
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(assign, caches)

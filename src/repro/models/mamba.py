@@ -1,0 +1,116 @@
+"""Mamba2 (SSD) block — selective state space with scalar-per-head decay.
+
+Block (arXiv:2405.21060, as used by Zamba2):
+  in_proj -> [z | x | B | C | dt]     (d_inner, d_inner, n_g*N, n_g*N, H)
+  causal depthwise conv (width 4) over [x|B|C]
+  dt = softplus(dt + dt_bias);  a_t = exp(-exp(A_log) * dt)   (per head)
+  SSD recurrence  h_t = a_t h_{t-1} + B_t^T (dt_t x_t);  y_t = C_t h_t + D x_t
+    -> mapped onto scan_ops.linear_scan_chunked with q=C, k=B, v=dt*x and
+       the scalar decay broadcast over the state dim (n_groups = 1).
+  gate y * silu(z), RMSNorm, out_proj.
+
+Decode state: conv tail (B, width-1, conv_ch) + ssm state (B, H, N, hd).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, scan_ops
+from repro.models.layers import dense_init, matmul
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    hd = cfg.ssm_head_dim
+    h = d_inner // hd
+    n = cfg.ssm_state_dim
+    conv_ch = d_inner + 2 * n           # x | B | C
+    return d_inner, hd, h, n, conv_ch
+
+
+def init_mamba_block(key, cfg):
+    d = cfg.d_model
+    d_inner, hd, h, n, conv_ch = _dims(cfg)
+    dt = layers.dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_inner + 2 * n + h
+    return {
+        "ln": layers.init_rmsnorm(d),
+        "in_proj": dense_init(ks[0], d, proj_out, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_ch),
+                                     jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.zeros((h,), jnp.float32),   # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_norm": layers.init_rmsnorm(d_inner),
+        "out_proj": dense_init(ks[2], d_inner, d, dt),
+    }
+
+
+def _causal_conv(x, w, b, tail=None):
+    """Depthwise causal conv. x: (B,S,C), w: (W,C). tail: (B,W-1,C) or None.
+
+    Returns (y, new_tail). Implemented as a sum of shifted scalings — width
+    is 4, so this is 4 fused multiply-adds, no im2col.
+    """
+    width = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(width))
+    new_tail = xp[:, x.shape[1]:, :] if x.shape[1] < width - 1 else \
+        xp[:, -(width - 1):, :]
+    return jax.nn.silu((y + b).astype(jnp.float32)).astype(x.dtype), new_tail
+
+
+def mamba_block(p, cfg, x, state, chunk=64):
+    """x: (B,S,d); state = {conv: (B,W-1,C), ssm: (B,H,N,hd)} or zeros."""
+    b, s, d = x.shape
+    d_inner, hd, h, n, conv_ch = _dims(cfg)
+    xn = layers.rms_norm(p["ln"], x, cfg.norm_eps)
+    zxbcdt = matmul(xn, p["in_proj"])
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + conv_ch]
+    dt_raw = zxbcdt[..., -h:].astype(jnp.float32)
+
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                 state["conv"])
+    xs = xbc[..., :d_inner].reshape(b, s, h, hd)
+    bb = xbc[..., d_inner:d_inner + n]                    # (B,S,N) group=1
+    cc = xbc[..., d_inner + n:]
+
+    dt_v = jax.nn.softplus(dt_raw + p["dt_bias"])          # (B,S,H)
+    a = jnp.exp(-jnp.exp(p["a_log"])[None, None] * dt_v)   # (B,S,H) in (0,1)
+
+    # map onto the generic diagonal-decay scan: heads axis first; B/C are
+    # shared across heads (n_groups = 1) so they broadcast over H.
+    q = jnp.broadcast_to(cc[:, None], (b, h, s, n))
+    k = jnp.broadcast_to(bb[:, None], (b, h, s, n))
+    v = (xs * dt_v[..., None]).transpose(0, 2, 1, 3)       # (B,H,S,hd)
+    w = jnp.broadcast_to(
+        a.transpose(0, 2, 1)[..., None], (b, h, s, n))     # scalar -> N
+
+    if s == 1 and state["ssm"] is not None:
+        new_ssm, o = scan_ops.step(
+            state["ssm"], q[:, :, 0], k[:, :, 0], v[:, :, 0], w[:, :, 0])
+        o = o[:, :, None, :]
+    else:
+        o, new_ssm = scan_ops.linear_scan_chunked(
+            q, k, v, w, initial_state=state["ssm"], chunk=chunk)
+
+    y = o.transpose(0, 2, 1, 3) + xs * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, d_inner)
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    y = layers.rms_norm(p["out_norm"], y.astype(x.dtype), cfg.norm_eps)
+    out = matmul(y, p["out_proj"])
+    return x + out, {"conv": new_conv, "ssm": new_ssm}
+
+
+def init_mamba_state(cfg, batch, dtype=jnp.float32):
+    d_inner, hd, h, n, conv_ch = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, h, n, hd), jnp.float32),
+    }

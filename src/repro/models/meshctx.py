@@ -1,0 +1,27 @@
+"""Ambient mesh context for model code that needs explicit shard_map blocks.
+
+The launchers (dryrun/train/serve) trace step functions inside
+`with mesh_context(mesh):`; model modules that host shard_map regions (the
+expert-parallel MoE path) fetch it here. Falls back to None — pure-GSPMD
+paths — when no mesh is installed (CPU unit tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+_MESH = contextvars.ContextVar("repro_mesh", default=None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh):
+    token = _MESH.set(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _MESH.reset(token)
+
+
+def current_mesh():
+    return _MESH.get()

@@ -1,0 +1,243 @@
+"""Mixture-of-Experts: top-k routing, capacity-based sort dispatch, shared
+experts. Covers deepseek-v2 (160 routed top-6 + 2 shared, softmax gates) and
+llama4-maverick (128 routed top-1 + 1 shared, sigmoid gate).
+
+Dispatch is the sort-based capacity scheme (GShard/MaxText style):
+tokens -> argsort by expert id -> positions within expert -> scatter into an
+(E, C, d) buffer -> batched per-expert SwiGLU -> gather/combine. FLOPs are
+the *active* compute N·k·d·ff (plus router), not the dense N·E all-experts
+product — this is what makes the 236B/400B configs trainable. With experts
+sharded over the "model" mesh axis the scatter/gather pair lowers to an
+all-to-all (token shuffle), the canonical EP pattern.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import dense_init, matmul
+
+
+def init_moe(key, cfg):
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    dt = layers.dtype_of(cfg)
+    ks = jax.random.split(key, 5)
+    # Expert weights carry a leading E axis (shardable over "model").
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": _stacked_init(ks[1], e, d, ff, dt),
+        "w_up": _stacked_init(ks[2], e, d, ff, dt),
+        "w_down": _stacked_init(ks[3], e, ff, d, dt),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = layers.init_mlp(
+            ks[4], d, cfg.moe_d_ff * cfg.num_shared_experts, dt)
+    return p
+
+
+def _stacked_init(key, e, d_in, d_out, dt):
+    keys = jax.random.split(key, e)
+    return jax.vmap(
+        lambda k: dense_init(k, d_in, d_out, dt))(keys)
+
+
+def top_k_routing(router_logits, k, gate_fn="softmax"):
+    """(N, E) logits -> (N, k) expert ids + normalized gates (fp32)."""
+    logits = router_logits.astype(jnp.float32)
+    gates_all = (jax.nn.softmax(logits, axis=-1) if gate_fn == "softmax"
+                 else jax.nn.sigmoid(logits))
+    gate_vals, expert_ids = jax.lax.top_k(gates_all, k)
+    if gate_fn == "softmax" and k > 1:
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    return expert_ids, gate_vals, gates_all
+
+
+def moe_apply(p, cfg, x, gate_fn="softmax"):
+    """x: (B, S, d) -> (B, S, d), plus router aux loss (load balancing).
+
+    Two paths:
+      * pure-GSPMD dense path (CPU tests / no mesh): sort-based dispatch
+        with global token indices. GSPMD cannot localize the combine
+        scatter and emits a full (N*k, d) fp32 all-reduce per layer —
+        measured at 2x128 GB/layer on deepseek-v2 (see EXPERIMENTS.md §Perf
+        iteration 1) — so production meshes use:
+      * shard_map EP path: activations are replicated across the "model"
+        axis under TP, so every expert shard dispatches/combines its own
+        experts LOCALLY; the only collective is one bf16 psum of the
+        (N_local, d) partial outputs — the same all-reduce a dense TP MLP
+        pays. Requires num_experts % model-axis == 0.
+    """
+    from repro.models import meshctx
+    mesh = meshctx.current_mesh()
+    if (cfg.shard_activations and mesh is not None
+            and "model" in mesh.axis_names):
+        m_size = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+        if m_size > 1 and cfg.num_experts % m_size == 0:
+            return _moe_apply_shardmap(p, cfg, x, gate_fn, mesh)
+    return _moe_apply_dense(p, cfg, x, gate_fn)
+
+
+def _moe_apply_dense(p, cfg, x, gate_fn="softmax"):
+    b, s, d = x.shape
+    n = b * s
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    cap = int(cfg.capacity_factor * n * k / e)
+    cap = max(8, min(cap, n))
+
+    xt = x.reshape(n, d)
+    router_logits = matmul(xt.astype(jnp.float32), p["router"])
+    expert_ids, gate_vals, gates_all = top_k_routing(
+        router_logits, k, gate_fn)
+
+    # ---- sort-based dispatch -------------------------------------------
+    flat_e = expert_ids.reshape(n * k)                  # (Nk,)
+    flat_g = gate_vals.reshape(n * k)
+    flat_tok = jnp.repeat(jnp.arange(n), k)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    tok_sorted = flat_tok[order]
+    g_sorted = flat_g[order]
+    # position within expert group = index - first index of the group
+    group_start = jnp.searchsorted(e_sorted, jnp.arange(e), side="left")
+    pos_in_e = jnp.arange(n * k) - group_start[e_sorted]
+    keep = pos_in_e < cap                                # drop overflow
+    slot = jnp.where(keep, e_sorted * cap + pos_in_e, e * cap)  # overflow slot
+
+    buf = jnp.zeros((e * cap + 1, d), x.dtype)
+    buf = buf.at[slot].set(xt[tok_sorted], mode="drop")
+    buf = buf[:-1].reshape(e, cap, d)
+
+    # ---- batched per-expert SwiGLU --------------------------------------
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"],
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"],
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # ---- combine ---------------------------------------------------------
+    y_flat = y.reshape(e * cap, d)
+    contrib = jnp.where(keep, g_sorted, 0.0)[:, None] * \
+        y_flat[jnp.minimum(slot, e * cap - 1)].astype(jnp.float32)
+    out = jnp.zeros((n, d), jnp.float32).at[tok_sorted].add(
+        jnp.where(keep[:, None], contrib, 0.0))
+
+    if cfg.num_shared_experts:
+        out = out + layers.mlp(p["shared"], xt, cfg.act,
+                               cfg).astype(jnp.float32)
+
+    # Switch-style load-balancing aux loss.
+    density = jnp.mean(
+        jax.nn.one_hot(expert_ids[:, 0], e, dtype=jnp.float32), axis=0)
+    prob_mass = jnp.mean(gates_all, axis=0)
+    aux = e * jnp.sum(density * prob_mass) * cfg.router_aux_coef
+    return out.reshape(b, s, d).astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel shard_map path (production meshes)
+# ---------------------------------------------------------------------------
+
+def _local_expert_ffn(x_loc, router, wg, wu, wd, *, cfg, gate_fn, e_total,
+                      dp_axes):
+    """Per-device body: dispatch MY experts locally, psum partial outputs.
+
+    x_loc: (B_loc, S, d) — the device's data shard, replicated over "model".
+    wg/wu/wd: (E_loc, ...) — this model-shard's experts (FSDP pre-gathered).
+    """
+    b_loc, s, d = x_loc.shape
+    n = b_loc * s
+    e_loc = wg.shape[0]
+    k = cfg.num_experts_per_tok
+    cap = max(8, min(int(cfg.capacity_factor * n * k / e_total), n))
+
+    xt = x_loc.reshape(n, d)
+    logits = jnp.einsum("nd,de->ne", xt.astype(jnp.float32), router,
+                        preferred_element_type=jnp.float32)
+    expert_ids, gate_vals, gates_all = top_k_routing(logits, k, gate_fn)
+
+    my_first = jax.lax.axis_index("model") * e_loc
+    flat_e = expert_ids.reshape(n * k)
+    flat_g = gate_vals.reshape(n * k)
+    flat_tok = jnp.repeat(jnp.arange(n), k)
+    mine = (flat_e >= my_first) & (flat_e < my_first + e_loc)
+    e_rel = jnp.where(mine, flat_e - my_first, e_loc)      # e_loc = discard
+
+    order = jnp.argsort(e_rel, stable=True)
+    e_sorted = e_rel[order]
+    tok_sorted = flat_tok[order]
+    g_sorted = flat_g[order]
+    group_start = jnp.searchsorted(e_sorted, jnp.arange(e_loc + 1),
+                                   side="left")
+    pos_in_e = jnp.arange(n * k) - group_start[jnp.minimum(e_sorted, e_loc)]
+    keep = (e_sorted < e_loc) & (pos_in_e < cap)
+    slot = jnp.where(keep, e_sorted * cap + pos_in_e, e_loc * cap)
+
+    buf = jnp.zeros((e_loc * cap + 1, d), x_loc.dtype)
+    buf = buf.at[slot].set(xt[tok_sorted], mode="drop")
+    buf = buf[:-1].reshape(e_loc, cap, d)
+
+    g = jnp.einsum("ecd,edf->ecf", buf, wg,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", buf, wu,
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x_loc.dtype)
+    y = jnp.einsum("ecf,efd->ecd", h, wd,
+                   preferred_element_type=jnp.float32).astype(x_loc.dtype)
+
+    y_flat = y.reshape(e_loc * cap, d)
+    contrib = jnp.where(keep, g_sorted, 0.0)[:, None].astype(x_loc.dtype) \
+        * y_flat[jnp.minimum(slot, e_loc * cap - 1)]
+    partial = jnp.zeros((n, d), x_loc.dtype).at[tok_sorted].add(
+        jnp.where(keep[:, None], contrib, jnp.zeros_like(contrib)))
+
+    # THE collective: one bf16-width psum of the partial outputs.
+    out = jax.lax.psum(partial, "model")
+
+    # load-balance aux (Switch): local stats, pmean'd over the data axes
+    # (identical across "model" by construction: x and router are
+    # model-replicated, so every model shard routes identically).
+    density = jnp.mean(
+        jax.nn.one_hot(expert_ids[:, 0], e_total, dtype=jnp.float32), axis=0)
+    prob_mass = jnp.mean(gates_all, axis=0)
+    aux = e_total * jnp.sum(density * prob_mass) * cfg.router_aux_coef
+    aux = jax.lax.pmean(aux, dp_axes)
+    return out.reshape(b_loc, s, d), aux
+
+
+def _moe_apply_shardmap(p, cfg, x, gate_fn, mesh):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp_entry = dp if len(dp) > 1 else dp[0]
+    e_total = cfg.num_experts
+
+    # FSDP pre-gather: force expert weights to model-sharded-only layout so
+    # the shard_map body sees whole (E_loc, d, ff) experts.
+    wg = jax.lax.with_sharding_constraint(
+        p["w_gate"], P("model", None, None))
+    wu = jax.lax.with_sharding_constraint(p["w_up"], P("model", None, None))
+    wd = jax.lax.with_sharding_constraint(
+        p["w_down"], P("model", None, None))
+    router = jax.lax.with_sharding_constraint(p["router"], P(None, None))
+
+    body = functools.partial(_local_expert_ffn, cfg=cfg, gate_fn=gate_fn,
+                             e_total=e_total, dp_axes=dp)
+    out, aux = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp_entry, None, None), P(None, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=(P(dp_entry, None, None), P()),
+        check_rep=False,
+    )(x, router, wg, wu, wd)
+
+    if cfg.num_shared_experts:
+        out = out + layers.mlp(p["shared"], x, cfg.act, cfg)
+    return out, aux

@@ -1,0 +1,157 @@
+"""RWKV6 "Finch" — attention-free time-mix with data-dependent decay.
+
+Faithful block structure (arXiv:2404.05892):
+  time-mix : token-shift ddlerp (low-rank data-dependent interpolation) into
+             r/k/v/g/w projections; per-channel, per-token decay
+             w_t = exp(-exp(w0 + lora_w(x_w))) — the Finch contribution —
+             and bonus u for the current token; wkv linear recurrence
+             (models/scan_ops chunked form; kernels/linear_scan on TPU);
+             per-head group-norm, silu(g) gate, output projection.
+  channel-mix : token-shift squared-relu MLP with receptance gate.
+
+State per layer for decode: shift_tm (B,d), shift_cm (B,d), wkv (B,H,hd,hd).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, scan_ops
+from repro.models.layers import dense_init, matmul
+
+_MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def init_rwkv_block(key, cfg):
+    d = cfg.d_model
+    hd = cfg.ssm_head_dim
+    h = d // hd
+    lora = cfg.rwkv_lora_dim
+    dt = layers.dtype_of(cfg)
+    ks = jax.random.split(key, 14)
+    p = {
+        "ln_tm": layers.init_rmsnorm(d),
+        "ln_cm": layers.init_rmsnorm(d),
+        # ddlerp mixing parameters
+        "mu_x": jnp.zeros((d,), jnp.float32),
+        "mu": jnp.zeros((len(_MIX_NAMES), d), jnp.float32),
+        "maa_w1": dense_init(ks[0], d, len(_MIX_NAMES) * lora, dt),
+        "maa_w2": (jax.random.normal(ks[1], (len(_MIX_NAMES), lora, d),
+                                     jnp.float32) * 0.01).astype(dt),
+        # projections
+        "wr": dense_init(ks[2], d, d, dt),
+        "wk": dense_init(ks[3], d, d, dt),
+        "wv": dense_init(ks[4], d, d, dt),
+        "wg": dense_init(ks[5], d, d, dt),
+        "wo": dense_init(ks[6], d, d, dt),
+        # data-dependent decay (lora dim 2x)
+        "w0": jnp.zeros((d,), jnp.float32) - 6.0,
+        "wd1": dense_init(ks[7], d, 2 * lora, dt),
+        "wd2": (jax.random.normal(ks[8], (2 * lora, d), jnp.float32)
+                * 0.01).astype(dt),
+        "u": (jax.random.normal(ks[9], (h, hd), jnp.float32) * 0.1),
+        "ln_x": layers.init_rmsnorm(d),   # per-head group norm (flattened)
+        # channel mix
+        "cm_mu_k": jnp.zeros((d,), jnp.float32),
+        "cm_mu_r": jnp.zeros((d,), jnp.float32),
+        "cm_wk": dense_init(ks[10], d, cfg.d_ff, dt),
+        "cm_wv": dense_init(ks[11], cfg.d_ff, d, dt),
+        "cm_wr": dense_init(ks[12], d, d, dt),
+    }
+    return p
+
+
+def _shift(x, state):
+    """Token shift: previous token's activation (state carries t = -1)."""
+    prev = jnp.concatenate([state[:, None, :], x[:, :-1, :]], axis=1)
+    return prev
+
+
+def _ddlerp(p, x, xx):
+    """Data-dependent interpolation producing the 5 mixed inputs."""
+    base = x + xx * p["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(matmul(base, p["maa_w1"]).astype(jnp.float32))
+    lora = lora.reshape(*lora.shape[:-1], len(_MIX_NAMES), -1)
+    delta = jnp.einsum("...nl,nld->...nd", lora,
+                       p["maa_w2"].astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    mixed = []
+    for i in range(len(_MIX_NAMES)):
+        mu_i = p["mu"][i] + delta[..., i, :]
+        mixed.append(x + xx * mu_i.astype(x.dtype))
+    return mixed  # order: w, k, v, r, g
+
+
+def time_mix(p, cfg, x, shift_state, wkv_state=None, chunk=64):
+    """x: (B,S,d). Returns (y, new_shift_state, new_wkv_state)."""
+    b, s, d = x.shape
+    hd = cfg.ssm_head_dim
+    h = d // hd
+    prev = _shift(x, shift_state)
+    xx = prev - x
+    x_w, x_k, x_v, x_r, x_g = _ddlerp(p, x, xx)
+
+    r = matmul(x_r, p["wr"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = matmul(x_k, p["wk"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = matmul(x_v, p["wv"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(matmul(x_g, p["wg"]).astype(jnp.float32))
+
+    dw = jnp.einsum("...l,ld->...d", jnp.tanh(
+        matmul(x_w, p["wd1"]).astype(jnp.float32)),
+        p["wd2"].astype(jnp.float32))
+    logw = -jnp.exp(jnp.clip(p["w0"] + dw, -20.0, 8.0))   # <= 0
+    w = jnp.exp(logw).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+
+    u = p["u"]
+    if s == 1 and wkv_state is not None:
+        new_state, o = scan_ops.step(
+            wkv_state, r[:, :, 0], k[:, :, 0], v[:, :, 0], w[:, :, 0], u)
+        o = o[:, :, None, :]
+    else:
+        o, new_state = scan_ops.linear_scan_chunked(
+            r, k, v, w, u, initial_state=wkv_state, chunk=chunk)
+    # per-head group norm (RWKV's GroupNorm(n_heads)) — normalizes over hd
+    # within each head, so it stays local under head-sharded TP.
+    o = o.transpose(0, 2, 1, 3)                        # (b, s, h, hd)
+    of = o.astype(jnp.float32)
+    var = jnp.mean(of * of, axis=-1, keepdims=True)
+    o = (of * jax.lax.rsqrt(var + cfg.norm_eps)
+         * p["ln_x"]["scale"].reshape(h, hd)).reshape(b, s, d)
+    y = matmul((o * g).astype(x.dtype), p["wo"])
+    return y, x[:, -1, :], new_state
+
+
+def channel_mix(p, cfg, x, shift_state):
+    prev = _shift(x, shift_state)
+    xx = prev - x
+    xk = x + xx * p["cm_mu_k"].astype(x.dtype)
+    xr = x + xx * p["cm_mu_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(matmul(xk, p["cm_wk"]).astype(jnp.float32)))
+    vv = matmul(kk.astype(x.dtype), p["cm_wv"])
+    rr = jax.nn.sigmoid(matmul(xr, p["cm_wr"]).astype(jnp.float32))
+    return (rr * vv.astype(jnp.float32)).astype(x.dtype), x[:, -1, :]
+
+
+def rwkv_block(p, cfg, x, state, chunk=64):
+    """Full pre-norm RWKV6 block. state = dict(shift_tm, shift_cm, wkv)."""
+    h_tm, new_shift_tm, new_wkv = time_mix(
+        p, cfg, layers.rms_norm(p["ln_tm"], x, cfg.norm_eps),
+        state["shift_tm"], state["wkv"], chunk=chunk)
+    x = x + h_tm
+    h_cm, new_shift_cm = channel_mix(
+        p, cfg, layers.rms_norm(p["ln_cm"], x, cfg.norm_eps),
+        state["shift_cm"])
+    x = x + h_cm
+    return x, {"shift_tm": new_shift_tm, "shift_cm": new_shift_cm,
+               "wkv": new_wkv}
+
+
+def init_rwkv_state(cfg, batch, dtype=jnp.float32):
+    d = cfg.d_model
+    hd = cfg.ssm_head_dim
+    h = d // hd
+    return {
+        "shift_tm": jnp.zeros((batch, d), dtype),
+        "shift_cm": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+    }

@@ -1,0 +1,139 @@
+"""Diagonal-decay linear recurrences — shared substrate for RWKV6 and Mamba2.
+
+The recurrence (state S in R^{dk x dv} per head):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = q_t (S_{t-1} + diag(u) k_t^T v_t)      [RWKV6: current-token bonus u]
+    o_t = q_t S_t                                 [Mamba2 / plain GLA: u = None]
+
+with per-channel decays w_t in (0,1]^{dk} (Mamba2's scalar-per-head decay is
+the broadcast special case). Three implementations:
+
+  linear_scan_recurrent : exact jax.lax.scan over time — the oracle; also the
+                          O(1)-state decode path (single-step form below).
+  linear_scan_chunked   : GLA-style chunked parallel form — what training and
+                          long-context prefill lower to; the jnp analogue of
+                          kernels/linear_scan (Pallas/MXU is the TPU hot path).
+  step                  : one decode step given carried state.
+
+Shapes: q,k: (B, H, S, dk); v: (B, H, S, dv); w: (B, H, S, dk) in (0,1];
+u: (H, dk) or None. Output: (B, H, S, dv); state: (B, H, dk, dv).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_recurrent(q, k, v, w, u=None, initial_state=None):
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    state0 = (jnp.zeros((b, h, dk, dv), jnp.float32)
+              if initial_state is None else initial_state.astype(jnp.float32))
+
+    def body(state, inp):
+        qt, kt, vt, wt = inp  # (b,h,dk),(b,h,dk),(b,h,dv),(b,h,dk)
+        kv = kt[..., :, None] * vt[..., None, :]           # (b,h,dk,dv)
+        if u is not None:
+            att = state + u[None, :, :, None] * kv
+        else:
+            att = state * wt[..., None] + kv               # post-update read
+        out = jnp.einsum("bhk,bhkv->bhv", qt, att,
+                         preferred_element_type=jnp.float32)
+        new_state = state * wt[..., None] + kv
+        return new_state, out
+
+    xs = (q.transpose(2, 0, 1, 3).astype(jnp.float32),
+          k.transpose(2, 0, 1, 3).astype(jnp.float32),
+          v.transpose(2, 0, 1, 3).astype(jnp.float32),
+          w.transpose(2, 0, 1, 3).astype(jnp.float32))
+    state, outs = jax.lax.scan(body, state0, xs)
+    return outs.transpose(1, 2, 0, 3).astype(v.dtype), state
+
+
+def step(state, qt, kt, vt, wt, u=None):
+    """Single decode step. state: (B,H,dk,dv); qt/kt/wt: (B,H,dk); vt: (B,H,dv)."""
+    state = state.astype(jnp.float32)
+    kv = kt[..., :, None] * vt[..., None, :]
+    if u is not None:
+        att = state + u[None, :, :, None] * kv
+    else:
+        att = state * wt[..., None] + kv
+    out = jnp.einsum("bhk,bhkv->bhv", qt.astype(jnp.float32),
+                     att.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    new_state = state * wt[..., None] + kv
+    return new_state, out.astype(vt.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def linear_scan_chunked(q, k, v, w, u=None, initial_state=None, chunk=64):
+    """Chunked (GLA-style) parallel form — exact up to fp accumulation.
+
+    Within a chunk of length c, with cumulative decay L_t = prod_{i<=t} w_i:
+      intra: A[t,s] = (q_t . L_t) . (k_s / L_s) for s < t  (s = t uses bonus u
+             or the undeycayed k_t when reading post-update)
+      inter: o_t += (q_t . L_t) S_in;   S_out = diag(L_c) S_in + sum decayed kv
+    Decay ratios are formed inside a chunk only (c = 64) which bounds the
+    dynamic range; inputs are fp32 inside.
+    """
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, s)
+    assert s % c == 0, "sequence must divide the chunk size"
+    n = s // c
+    f32 = jnp.float32
+    qc = q.reshape(b, h, n, c, dk).astype(f32)
+    kc = k.reshape(b, h, n, c, dk).astype(f32)
+    vc = v.reshape(b, h, n, c, dv).astype(f32)
+    wc = jnp.clip(w.reshape(b, h, n, c, dk).astype(f32), 1e-6, 1.0)
+
+    logw = jnp.log(wc)
+    clog = jnp.cumsum(logw, axis=-2)                      # L_t (log), incl. t
+    L = jnp.exp(clog)                                     # (b,h,n,c,dk)
+    L_total = jnp.exp(clog[..., -1, :])                   # (b,h,n,dk)
+
+    # Read convention: post-update (Mamba2/GLA, u=None) reads S_t so the
+    # strict-lower decay ratio is L_t/L_s; pre-update + bonus (RWKV6) reads
+    # S_{t-1} so the ratio excludes w_t: L_{t-1}/L_s = exp(clog - logw)/L_s.
+    q_tilde = qc * (L if u is None else jnp.exp(clog - logw))
+    # k decayed forward to the chunk end: k_s * L_total / L_s
+    k_hat = kc * jnp.exp(clog[..., -1:, :] - clog)
+    k_div = kc * jnp.exp(-clog)                           # k_s / L_s
+    attn = jnp.einsum("bhntk,bhnsk->bhnts", q_tilde, k_div,
+                      preferred_element_type=f32)
+    tri = jnp.tril(jnp.ones((c, c), f32), k=-1)           # strictly causal
+    attn_strict = attn * tri
+    if u is not None:
+        diag_val = jnp.einsum("bhntk,hk,bhntk->bhnt", qc, u.astype(f32), kc,
+                              preferred_element_type=f32)
+    else:
+        # post-update read: s = t term with no decay ratio = q_t . k_t
+        diag_val = jnp.einsum("bhntk,bhntk->bhnt", qc, kc,
+                              preferred_element_type=f32)
+    o_intra = jnp.einsum("bhnts,bhnsv->bhntv", attn_strict, vc,
+                         preferred_element_type=f32) \
+        + diag_val[..., None] * vc
+
+    # inter-chunk: carry state across chunks with a scan over n.
+    kv_in = jnp.einsum("bhnsk,bhnsv->bhnkv", k_hat, vc,
+                       preferred_element_type=f32)        # decayed to chunk end
+
+    state0 = (jnp.zeros((b, h, dk, dv), f32)
+              if initial_state is None else initial_state.astype(f32))
+
+    def body(state, inp):
+        qt, ltot, kv_c = inp  # (b,h,c,dk), (b,h,dk), (b,h,dk,dv)
+        o_inter = jnp.einsum("bhtk,bhkv->bhtv", qt, state,
+                             preferred_element_type=f32)
+        new_state = state * ltot[..., None] + kv_c
+        return new_state, o_inter
+
+    xs = (q_tilde.transpose(2, 0, 1, 3, 4),
+          L_total.transpose(2, 0, 1, 3),
+          kv_in.transpose(2, 0, 1, 3, 4))
+    state, o_inter = jax.lax.scan(body, state0, xs)
+    o = o_intra + o_inter.transpose(1, 2, 0, 3, 4)
+    return o.reshape(b, h, s, dv).astype(v.dtype), state

@@ -1,0 +1,75 @@
+"""Unit + property tests for the Lemma-1 confidence bounds."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bounds
+
+
+def test_ub_lb_symmetry():
+    assert float(bounds.ub(0.5, 0.1, 100, 0.05)) == pytest.approx(
+        1.0 - float(bounds.lb(0.5, 0.1, 100, 0.05)))
+
+
+def test_zero_sigma_gives_tight_bounds():
+    assert float(bounds.ub(0.3, 0.0, 100, 0.05)) == pytest.approx(0.3)
+    assert float(bounds.lb(0.3, 0.0, 100, 0.05)) == pytest.approx(0.3)
+
+
+def test_empty_prefix_is_infinite():
+    assert np.isinf(float(bounds.gaussian_width(1.0, 0, 0.05)))
+
+
+@given(st.floats(0.01, 0.99), st.floats(0.01, 0.5),
+       st.integers(10, 10_000), st.floats(0.001, 0.2))
+@settings(max_examples=50, deadline=None)
+def test_width_monotonicity(mu, sigma, s, delta):
+    """Width shrinks with s, grows as delta shrinks."""
+    w = float(bounds.gaussian_width(sigma, s, delta))
+    w_more_samples = float(bounds.gaussian_width(sigma, 4 * s, delta))
+    w_stricter = float(bounds.gaussian_width(sigma, s, delta / 10))
+    assert w_more_samples == pytest.approx(w / 2, rel=1e-5)
+    assert w_stricter > w
+
+
+def test_lemma1_coverage_bernoulli():
+    """Empirical coverage: UB >= true mean with frequency >= 1 - delta."""
+    rng = np.random.default_rng(0)
+    p_true, s, delta, trials = 0.1, 500, 0.1, 400
+    miss = 0
+    for _ in range(trials):
+        z = (rng.random(s) < p_true).astype(np.float32)
+        mu, sg = bounds.sample_mean_std(z)
+        if float(bounds.ub(mu, sg, s, delta)) < p_true:
+            miss += 1
+    assert miss / trials <= delta + 0.05
+
+
+@given(st.lists(st.floats(0.0, 1.0), min_size=2, max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_prefix_stats_match_naive(xs):
+    z = np.asarray(xs, np.float32)
+    mu, sg, n = bounds.prefix_mean_std(z)
+    for i in (0, len(xs) // 2, len(xs) - 1):
+        prefix = z[:i + 1]
+        assert float(mu[i]) == pytest.approx(float(prefix.mean()), abs=1e-4)
+        assert float(sg[i]) == pytest.approx(float(prefix.std()), abs=1e-3)
+        assert float(n[i]) == i + 1
+
+
+def test_weighted_prefix_reduces_to_uniform():
+    z = np.asarray([1, 0, 1, 1, 0], np.float32)
+    w = np.ones_like(z)
+    mu_w, sg_w, ess = bounds.weighted_prefix_mean_std(z, w)
+    mu_u, sg_u, n = bounds.prefix_mean_std(z)
+    np.testing.assert_allclose(mu_w, mu_u, atol=1e-6)
+    np.testing.assert_allclose(ess, n, atol=1e-4)
+
+
+def test_masked_prefix_counts_only_masked():
+    z = np.asarray([1.0, 0.5, 0.0, 1.0], np.float32)
+    m = np.asarray([1, 0, 1, 1], np.float32)
+    mu, sg, n = bounds.masked_prefix_mean_std(z, m)
+    assert float(n[-1]) == 3
+    assert float(mu[-1]) == pytest.approx((1.0 + 0.0 + 1.0) / 3)

@@ -1,0 +1,78 @@
+"""Checkpoint manager: atomicity, keep-k, async, elastic restore."""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.optim import adamw
+
+
+def _params():
+    return {"layer": {"w": jnp.arange(12.0).reshape(3, 4),
+                      "b": jnp.ones(4)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    params = _params()
+    opt = adamw.init(params)
+    mgr.save(7, params, opt, extra={"data_seed": 42})
+    p2, o2, step, extra = mgr.restore()
+    assert step == 7
+    assert extra["data_seed"] == 42
+    np.testing.assert_allclose(np.asarray(p2["layer"]["w"]),
+                               np.asarray(params["layer"]["w"]))
+    assert isinstance(o2, adamw.AdamWState)
+    assert int(o2.step) == 0
+
+
+def test_keep_k_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _params())
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_stale_tmp_cleanup(tmp_path):
+    (tmp_path / "tmp.0000000009.0").mkdir()
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _params())
+    assert not list(pathlib.Path(tmp_path).glob("tmp.*"))
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save_async(3, _params(), None)
+    _, _, step, _ = mgr.restore()       # restore waits for the writer
+    assert step == 3
+
+
+def test_restore_specific_step(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=5)
+    for s in (1, 2, 3):
+        p = jax.tree.map(lambda x, s=s: x * s, _params())
+        mgr.save(s, p)
+    p2, _, step, _ = mgr.restore(step=2)
+    assert step == 2
+    np.testing.assert_allclose(np.asarray(p2["layer"]["b"]), 2.0)
+
+
+def test_elastic_restore_with_mesh(tmp_path):
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_test_mesh
+    mgr = CheckpointManager(tmp_path)
+    params = _params()
+    mgr.save(1, params)
+    mesh = make_test_mesh((1, 1))
+    specs = {"layer": {"w": P(None, None), "b": P(None)}}
+    p2, _, _, _ = mgr.restore(mesh=mesh, specs=specs)
+    np.testing.assert_allclose(np.asarray(p2["layer"]["w"]),
+                               np.asarray(params["layer"]["w"]))
+
+
+def test_missing_checkpoint_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        CheckpointManager(tmp_path).restore()

@@ -1,0 +1,72 @@
+"""Fault tolerance: straggler detection, restart-and-resume training."""
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.data.pipeline import DeterministicSource
+from repro.launch.fault import (HeartbeatConfig, HeartbeatMonitor,
+                                LoopConfig, RestartRequired, TrainLoop)
+
+
+def test_monitor_flags_missing_heartbeat():
+    mon = HeartbeatMonitor(3, HeartbeatConfig(deadline_s=10))
+    now = 1000.0
+    for w in range(3):
+        mon.report(w, 1.0, now=now)
+    assert mon.dead_workers(now=now + 5) == []
+    mon.report(0, 1.0, now=now + 20)
+    mon.report(1, 1.0, now=now + 20)
+    assert mon.dead_workers(now=now + 20) == [2]
+
+
+def test_monitor_flags_straggler():
+    mon = HeartbeatMonitor(4, HeartbeatConfig(min_history=4,
+                                              straggler_mad_k=5.0))
+    for _ in range(8):
+        for w in range(3):
+            mon.report(w, 1.0 + 0.01 * w)
+        mon.report(3, 30.0)
+    assert mon.stragglers() == [3]
+
+
+def test_train_loop_restarts_and_completes(tmp_path):
+    """Inject a failure mid-run; the loop restores and finishes with the
+    exact same data stream (deterministic source)."""
+    ckpt = CheckpointManager(tmp_path)
+    seen = []
+    fail_once = {"armed": True}
+
+    def step_fn(params, opt, batch):
+        step_id = int(batch["x"][0])
+        if fail_once["armed"] and step_id == 7:
+            fail_once["armed"] = False
+            raise RestartRequired("injected failure")
+        seen.append(step_id)
+        return params + 1, opt, {"loss": 0.0}
+
+    src = DeterministicSource(
+        lambda rng, step: {"x": np.full(2, step)}, seed=0)
+    loop = TrainLoop(step_fn, src, ckpt,
+                     LoopConfig(total_steps=10, ckpt_every=2))
+    ckpt.save(0, np.asarray(0.0), None)
+    params, _, step = loop.run(np.asarray(0.0), None, start_step=0)
+    assert step == 10
+    assert loop.restarts == 1
+    # steps replay from the last checkpoint (6) after failing at 7
+    assert seen == [0, 1, 2, 3, 4, 5, 6, 6, 7, 8, 9]
+    # params restored to the step-6 checkpoint value (6) + 4 replayed steps
+    assert float(params) == 10.0
+
+
+def test_loop_gives_up_after_max_restarts(tmp_path):
+    ckpt = CheckpointManager(tmp_path)
+    ckpt.save(0, np.asarray(0.0), None)
+
+    def always_fail(params, opt, batch):
+        raise RestartRequired("down")
+
+    src = DeterministicSource(lambda rng, step: {"x": np.zeros(1)}, seed=0)
+    loop = TrainLoop(always_fail, src, ckpt,
+                     LoopConfig(total_steps=5, max_restarts=2))
+    with pytest.raises(RestartRequired):
+        loop.run(np.asarray(0.0), None)

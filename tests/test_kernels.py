@@ -1,0 +1,118 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.linear_scan import ops as ls_ops
+from repro.kernels.score_hist import ops as sh_ops
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,kv,s,dh", [
+    (1, 4, 4, 128, 64),     # MHA
+    (2, 8, 2, 256, 64),     # GQA group 4
+    (1, 6, 1, 128, 128),    # MQA
+])
+def test_flash_attention_matches_ref(b, h, kv, s, dh):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, dh), jnp.float32)
+    o_k = fa_ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    o_r = fa_ops.flash_attention(q, k, v, backend="ref")
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 2e-2)])
+def test_flash_attention_dtypes(dtype, tol):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64), dtype)
+    k = jax.random.normal(ks[1], (1, 128, 2, 64), dtype)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64), dtype)
+    o_k = fa_ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    o_r = fa_ops.flash_attention(q, k, v, backend="ref")
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_r, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 64))
+    k = jax.random.normal(ks[1], (1, 128, 2, 64))
+    v = jax.random.normal(ks[2], (1, 128, 2, 64))
+    o_k = fa_ops.flash_attention(q, k, v, causal=False, block_q=64,
+                                 block_k=64)
+    o_r = fa_ops.flash_attention(q, k, v, causal=False, backend="ref")
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# linear scan
+# --------------------------------------------------------------------------
+
+def _scan_inputs(key, b, h, s, dk, dv, decay_shift):
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, h, s, dk)) * 0.5
+    k = jax.random.normal(ks[1], (b, h, s, dk)) * 0.5
+    v = jax.random.normal(ks[2], (b, h, s, dv)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, h, s, dk))
+                       + decay_shift)
+    u = jax.random.normal(ks[4], (h, dk)) * 0.3
+    return q, k, v, w, u
+
+
+@pytest.mark.parametrize("bonus", [False, True])
+@pytest.mark.parametrize("chunk", [16, 32, 64])
+def test_linear_scan_matches_recurrence(bonus, chunk):
+    q, k, v, w, u = _scan_inputs(jax.random.PRNGKey(0), 2, 2, 128, 16, 24,
+                                 2.5)
+    uu = u if bonus else None
+    o_k, s_k = ls_ops.linear_scan(q, k, v, w, uu, chunk=chunk)
+    o_r, s_r = ls_ops.linear_scan(q, k, v, w, uu, backend="ref")
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), atol=1e-4)
+
+
+def test_linear_scan_envelope_boundary():
+    """Decays at the documented floor (w >= 0.1) still match the oracle."""
+    q, k, v, w, u = _scan_inputs(jax.random.PRNGKey(1), 1, 2, 256, 16, 16,
+                                 0.0)
+    w = jnp.clip(w, 0.1, 1.0)
+    o_k, _ = ls_ops.linear_scan(q, k, v, w, u, chunk=32)
+    o_r, _ = ls_ops.linear_scan(q, k, v, w, u, backend="ref")
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=1e-3)
+
+
+def test_linear_scan_out_of_envelope_is_finite():
+    q, k, v, w, u = _scan_inputs(jax.random.PRNGKey(2), 1, 1, 128, 8, 8,
+                                 -3.0)
+    o_k, s_k = ls_ops.linear_scan(q, k, v, w, u, chunk=32)
+    assert bool(jnp.all(jnp.isfinite(o_k)))
+    assert bool(jnp.all(jnp.isfinite(s_k)))
+
+
+# --------------------------------------------------------------------------
+# score hist
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,bins", [(4096, 512), (10_000, 4096), (777, 512)])
+def test_score_hist_matches_ref(n, bins):
+    s = jax.random.beta(jax.random.PRNGKey(0), 0.1, 1.0, (n,))
+    out_k = sh_ops.score_hist(s, bins, block_n=1024)
+    out_r = sh_ops.score_hist(s, bins, backend="ref")
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+
+def test_score_hist_total_count():
+    s = jax.random.uniform(jax.random.PRNGKey(1), (5000,))
+    counts, _, _ = sh_ops.score_hist(s, 512)
+    assert float(jnp.sum(counts)) == 5000

@@ -1,0 +1,94 @@
+"""Per-arch smoke tests (reduced configs) + prefill/decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config, SHAPES
+from repro.configs.base import shape_applicable
+from repro.models import model
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_loss(arch):
+    cfg = get_smoke_config(arch)
+    params = model.init(KEY, cfg)
+    tok_shape = (B, S, cfg.num_codebooks) if cfg.num_codebooks > 1 else (B, S)
+    tokens = jax.random.randint(KEY, tok_shape, 0, cfg.vocab_size)
+    logits, aux = model.apply_train(params, cfg, tokens)
+    expect = (B, S, cfg.num_codebooks, cfg.vocab_size) \
+        if cfg.num_codebooks > 1 else (B, S, cfg.vocab_size)
+    assert logits.shape == expect
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    loss, (ce, _) = model.loss_fn(params, cfg, tokens, tokens)
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    params = model.init(KEY, cfg)
+    caches = model.init_caches(cfg, B, S, jnp.float32)
+    tok_shape = (B, 1, cfg.num_codebooks) if cfg.num_codebooks > 1 else (B, 1)
+    tokens = jax.random.randint(KEY, tok_shape, 0, cfg.vocab_size)
+    pos = jnp.zeros((B,), jnp.int32)
+    logits, new_caches = model.apply_decode(params, cfg, tokens, caches, pos)
+    assert logits.shape[:2] == (B, 1)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    # cache structure preserved
+    assert jax.tree_util.tree_structure(caches) == \
+        jax.tree_util.tree_structure(new_caches)
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "deepseek-v2-236b", "rwkv6-7b",
+                                  "zamba2-1.2b"])
+def test_prefill_decode_consistency(arch):
+    """Iterated decode must reproduce the prefill logits step by step —
+    the strongest end-to-end correctness check of cache semantics."""
+    cfg = get_smoke_config(arch)
+    params = model.init(jax.random.PRNGKey(1), cfg)
+    t = 8
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, t), 0,
+                                cfg.vocab_size)
+    logits_pre, _ = model.apply_train(params, cfg, tokens)
+
+    caches = model.init_caches(cfg, B, t, jnp.float32)
+    outs = []
+    for i in range(t):
+        pos = jnp.full((B,), i, jnp.int32)
+        lo, caches = model.apply_decode(params, cfg, tokens[:, i:i + 1],
+                                        caches, pos)
+        outs.append(lo[:, 0])
+    logits_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_pre), atol=2e-2, rtol=2e-2)
+
+
+def test_proxy_scores_in_unit_interval():
+    cfg = get_smoke_config("smollm-360m")
+    params = model.init(KEY, cfg)
+    tokens = jax.random.randint(KEY, (4, S), 0, cfg.vocab_size)
+    scores = model.proxy_scores(params, cfg, tokens)
+    assert scores.shape == (4,)
+    assert float(scores.min()) >= 0.0 and float(scores.max()) <= 1.0
+
+
+def test_long_500k_applicability_rules():
+    long = [s for s in SHAPES if s.name == "long_500k"][0]
+    runs = {a: shape_applicable(get_config(a), long)[0] for a in ARCH_IDS}
+    assert runs["rwkv6-7b"] and runs["zamba2-1.2b"]
+    assert not runs["yi-6b"] and not runs["chameleon-34b"]
+    assert sum(runs.values()) == 2
+
+
+def test_param_counts_match_published():
+    expected = {"yi-6b": 6.1e9, "deepseek-7b": 6.9e9, "rwkv6-7b": 7.6e9,
+                "chameleon-34b": 34.3e9, "deepseek-v2-236b": 236e9,
+                "llama4-maverick-400b-a17b": 398e9, "zamba2-1.2b": 1.2e9,
+                "smollm-360m": 0.36e9}
+    for arch, n in expected.items():
+        got = get_config(arch).param_count()
+        assert abs(got - n) / n < 0.05, f"{arch}: {got:.3g} vs {n:.3g}"

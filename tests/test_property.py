@@ -1,0 +1,85 @@
+"""Hypothesis property tests on the system's statistical invariants."""
+import jax
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import binned, sampling, thresholds
+
+import jax.numpy as jnp
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.05, 0.95))
+@settings(max_examples=15, deadline=None)
+def test_rt_threshold_never_above_empirical_cutoff(seed, gamma):
+    """The CI-corrected threshold is always <= the uncorrected one:
+    conservatism can only ADD records for a recall target."""
+    rng = np.random.default_rng(seed)
+    a = rng.random(1500).astype(np.float32)
+    o = (rng.random(1500) < a).astype(np.float32)
+    if o.sum() == 0:
+        return
+    t_noci = float(thresholds.tau_unoci_r(a, o, gamma).tau)
+    t_ci = float(thresholds.tau_ci_r(a, o, np.ones(1500), gamma, 0.05).tau)
+    assert t_ci <= t_noci + 1e-6
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_pt_selected_set_is_score_downward_closed(seed):
+    """R2 = {A >= tau}: any record with score above a selected record's
+    score is also selected (threshold semantics)."""
+    rng = np.random.default_rng(seed)
+    a = rng.random(2000).astype(np.float32)
+    o = (rng.random(2000) < a ** 2).astype(np.float32)
+    res = thresholds.tau_ci_p(a, o, 0.5, 0.1)
+    tau = float(res.tau)
+    sel = a >= tau
+    if sel.any():
+        assert a[sel].min() >= tau
+
+
+@given(st.floats(0.01, 1.0), st.floats(0.2, 3.0),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_weights_are_probabilities(alpha, beta, seed):
+    rng = np.random.default_rng(seed)
+    scores = rng.beta(alpha, beta, 3000).astype(np.float32)
+    for scheme in (sampling.sqrt_proxy_weights,
+                   sampling.proportional_proxy_weights):
+        w = np.asarray(scheme(jnp.asarray(scores)))
+        assert abs(w.sum() - 1.0) < 1e-3
+        assert (w >= 0).all()
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(64, 2048))
+@settings(max_examples=15, deadline=None)
+def test_sketch_count_conservation(seed, n):
+    rng = np.random.default_rng(seed)
+    s = rng.random(n).astype(np.float32)
+    sk = binned.build_sketch(jnp.asarray(s), 256)
+    assert float(sk.total) == n
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 500))
+@settings(max_examples=15, deadline=None)
+def test_rank_threshold_superset_property(seed, rank):
+    rng = np.random.default_rng(seed)
+    s = rng.random(5000).astype(np.float32)
+    sk = binned.build_sketch(jnp.asarray(s), 512)
+    tau = float(binned.rank_to_threshold(sk, rank))
+    assert (s >= tau).sum() >= min(rank, 5000)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_importance_estimator_mean_matches_population(seed):
+    """Self-normalized IS estimate of the positive rate is consistent."""
+    rng = np.random.default_rng(seed)
+    n = 30_000
+    scores = rng.beta(0.1, 1, n).astype(np.float32)
+    labels = (rng.random(n) < scores).astype(np.float32)
+    ws = sampling.draw_oracle_sample(jax.random.PRNGKey(seed % 1000),
+                                     jnp.asarray(scores), 8000, "sqrt")
+    est = float(np.mean(labels[np.asarray(ws.indices)] * np.asarray(ws.m)))
+    truth = float(labels.mean())
+    assert abs(est - truth) < max(0.5 * truth, 0.01)

@@ -1,0 +1,76 @@
+"""Query-layer semantics: budget, Algorithm-1 set construction, JT queries."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import queries
+from repro.core.oracle import (BudgetedOracle, BudgetExceededError,
+                               array_oracle)
+from repro.data.synthetic import make_beta
+
+
+def test_budget_enforced():
+    oracle = BudgetedOracle(lambda idx: np.zeros(len(idx)), budget=10)
+    oracle(np.arange(10))
+    with pytest.raises(BudgetExceededError):
+        oracle(np.arange(10, 21))
+
+
+def test_budget_dedup_and_cache():
+    calls = []
+
+    def fn(idx):
+        calls.append(len(idx))
+        return np.ones(len(idx))
+
+    oracle = BudgetedOracle(fn, budget=5)
+    out = oracle(np.asarray([3, 3, 1, 3]))
+    assert oracle.calls_used == 2          # {1, 3}
+    np.testing.assert_allclose(out, 1.0)
+    oracle(np.asarray([1, 3]))             # fully cached, no budget burn
+    assert oracle.calls_used == 2
+    assert set(oracle.labeled_positives()) == {1, 3}
+
+
+def test_result_includes_sampled_positives():
+    """Algorithm 1: R = R1 (labeled positives) ∪ R2 (A >= tau)."""
+    ds = make_beta(100_000, 0.01, 1.0, seed=11)
+    q = queries.SUPGQuery(target="precision", gamma=0.9, delta=0.05,
+                          budget=3000, method="is")
+    res = queries.run_query(jax.random.PRNGKey(0), ds.scores,
+                            array_oracle(ds.labels), q)
+    above = set(np.nonzero(ds.scores >= res.tau)[0])
+    extra = set(res.selected) - above
+    # every extra record must be an oracle-verified positive
+    assert all(ds.labels[i] > 0.5 for i in extra)
+    assert res.oracle_calls <= q.budget
+
+
+def test_joint_query_achieves_both_targets():
+    ds = make_beta(100_000, 0.01, 1.0, seed=13)
+    res = queries.run_joint_query(jax.random.PRNGKey(1), ds.scores,
+                                  array_oracle(ds.labels),
+                                  gamma_recall=0.8, gamma_precision=0.9,
+                                  stage_budget=4000)
+    truth = ds.truth_mask()
+    # stage 3 filters exhaustively -> precision is exactly 1.0
+    assert queries.precision_of(res.selected, truth) == pytest.approx(1.0)
+    assert queries.recall_of(res.selected, truth) >= 0.8 - 1e-9
+    assert res.oracle_calls > 4000         # stage-3 usage is unbounded
+
+
+def test_query_validation():
+    with pytest.raises(ValueError):
+        queries.SUPGQuery(target="f1", gamma=0.9)
+    with pytest.raises(ValueError):
+        queries.SUPGQuery(target="recall", gamma=1.5)
+
+
+def test_two_stage_restricts_sampling():
+    """Stage 2 oracle calls concentrate in the top-score region."""
+    ds = make_beta(200_000, 0.01, 1.0, seed=17)
+    q = queries.SUPGQuery(target="precision", gamma=0.9, delta=0.05,
+                          budget=2000, method="is", two_stage=True)
+    res = queries.run_query(jax.random.PRNGKey(2), ds.scores,
+                            array_oracle(ds.labels), q)
+    assert res.oracle_calls <= 2000

@@ -1,0 +1,75 @@
+"""End-to-end system test: the paper's full pipeline on a tiny stack.
+
+train a proxy LM on the planted-marker corpus -> score the corpus with the
+served model -> run a SUPG query against the exact oracle -> the returned
+set must satisfy the statistical target.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import SUPGQuery, array_oracle, precision_of, recall_of, \
+    run_query
+from repro.data import synthetic
+from repro.launch import train as trainlib
+from repro.models import model
+from repro.optim import adamw
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return ModelConfig(
+        name="tiny-proxy", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+        dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def trained_proxy(tiny_cfg):
+    """Train the proxy to classify marker presence via next-token signal:
+    sequences are labeled by appending a class token; the proxy score is
+    P(class=1 token | sequence)."""
+    toks, labels = synthetic.make_token_corpus(2048, 32, 128,
+                                               positive_rate=0.3, seed=0)
+    params = model.init(jax.random.PRNGKey(0), tiny_cfg)
+    opts = trainlib.TrainOptions(adamw=adamw.AdamWConfig(
+        lr=3e-3, warmup_steps=10, total_steps=60, weight_decay=0.0))
+    step = jax.jit(trainlib.make_train_step(tiny_cfg, opts))
+    opt_state = adamw.init(params)
+    # supervised stream: predict the class token at EVERY position — the
+    # causal model learns it at all post-marker positions, which makes the
+    # last-position proxy score sharp with few steps.
+    rng = np.random.default_rng(0)
+    for i in range(60):
+        idx = rng.integers(0, 2048, 64)
+        batch_toks = toks[idx].copy()
+        y = labels[idx].astype(np.int32)          # 0/1 class tokens
+        lab = np.broadcast_to(y[:, None], batch_toks.shape).astype(np.int32)
+        params, opt_state, metrics = step(
+            params, opt_state, {"tokens": jnp.asarray(batch_toks),
+                                "labels": jnp.asarray(lab)})
+    return params, toks, labels
+
+
+def test_proxy_learns_signal(trained_proxy, tiny_cfg):
+    params, toks, labels = trained_proxy
+    scores = np.asarray(model.proxy_scores(
+        params, tiny_cfg, jnp.asarray(toks[:512]), target_token=1))
+    pos = scores[labels[:512] > 0.5].mean()
+    neg = scores[labels[:512] < 0.5].mean()
+    assert pos > neg + 0.1     # informative proxy
+
+
+def test_supg_query_on_served_scores(trained_proxy, tiny_cfg):
+    params, toks, labels = trained_proxy
+    scores = np.asarray(model.proxy_scores(
+        params, tiny_cfg, jnp.asarray(toks), target_token=1))
+    truth = labels > 0.5
+    q = SUPGQuery(target="recall", gamma=0.8, delta=0.05, budget=400,
+                  method="is")
+    res = run_query(jax.random.PRNGKey(7), scores,
+                    array_oracle(labels), q)
+    assert recall_of(res.selected, truth) >= 0.8
+    assert res.oracle_calls <= 400

@@ -1,0 +1,119 @@
+"""Statistical-guarantee tests for Algorithms 2-5 — the paper's core claims."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import queries, thresholds
+from repro.core.oracle import array_oracle
+from repro.data.synthetic import make_adversarial, make_beta
+
+GAMMA, DELTA = 0.9, 0.05
+N, BUDGET, TRIALS = 300_000, 4000, 20
+
+
+@pytest.fixture(scope="module")
+def beta_ds():
+    return make_beta(N, 0.01, 1.0, seed=7)
+
+
+def _run_many(ds, target, method, trials=TRIALS, gamma=GAMMA):
+    fails, quality = 0, []
+    for t in range(trials):
+        q = queries.SUPGQuery(target=target, gamma=gamma, delta=DELTA,
+                              budget=BUDGET, method=method)
+        res = queries.run_query(jax.random.PRNGKey(1000 + t), ds.scores,
+                                array_oracle(ds.labels), q)
+        p = queries.precision_of(res.selected, ds.truth_mask())
+        r = queries.recall_of(res.selected, ds.truth_mask())
+        achieved, qual = (r, p) if target == "recall" else (p, r)
+        fails += achieved < gamma
+        quality.append(qual)
+    return fails / trials, float(np.median(quality))
+
+
+@pytest.mark.parametrize("target", ["recall", "precision"])
+def test_supg_guarantee_holds(beta_ds, target):
+    """Pr[target met] >= 1 - delta (binomial slack for 20 trials)."""
+    fail_rate, _ = _run_many(beta_ds, target, "is")
+    assert fail_rate <= DELTA + 0.11   # 20-trial binomial 95% slack
+
+
+@pytest.mark.parametrize("target", ["recall", "precision"])
+def test_uniform_ci_guarantee_holds(beta_ds, target):
+    fail_rate, _ = _run_many(beta_ds, target, "uniform")
+    assert fail_rate <= DELTA + 0.16
+
+
+def test_importance_beats_uniform_quality_pt(beta_ds):
+    """Figure 7: IS recall >> uniform recall at a precision target."""
+    _, q_is = _run_many(beta_ds, "precision", "is", trials=8)
+    _, q_u = _run_many(beta_ds, "precision", "uniform", trials=8)
+    assert q_is > 2 * max(q_u, 1e-4)
+
+
+def test_noci_baseline_fails_often(beta_ds):
+    """Figures 1/5/6: the no-CI baseline violates the target frequently."""
+    fail_rate, _ = _run_many(beta_ds, "recall", "noci", trials=12)
+    assert fail_rate > 0.2
+
+
+def test_guarantee_survives_adversarial_proxy():
+    """Defensive mixing: validity even with an anti-correlated proxy."""
+    ds = make_adversarial(100_000, 0.02, seed=3)
+    fails = 0
+    for t in range(10):
+        q = queries.SUPGQuery(target="recall", gamma=0.8, delta=DELTA,
+                              budget=5000, method="is")
+        res = queries.run_query(jax.random.PRNGKey(t), ds.scores,
+                                array_oracle(ds.labels), q)
+        fails += queries.recall_of(res.selected, ds.truth_mask()) < 0.8
+    assert fails <= 2
+
+
+# ---------------------------------------------------------------------------
+# estimator-level unit tests
+# ---------------------------------------------------------------------------
+
+def test_rt_estimator_monotone_in_gamma():
+    rng = np.random.default_rng(0)
+    a = rng.random(2000).astype(np.float32)
+    o = (rng.random(2000) < a).astype(np.float32)
+    taus = [float(thresholds.tau_ci_r(a, o, np.ones(2000), g, 0.05).tau)
+            for g in (0.5, 0.7, 0.9)]
+    assert taus[0] >= taus[1] >= taus[2]   # higher recall -> lower threshold
+
+
+def test_pt_no_positives_returns_empty():
+    a = np.linspace(0, 1, 1000).astype(np.float32)
+    o = np.zeros(1000, np.float32)
+    res = thresholds.tau_ci_p(a, o, 0.9, 0.05)
+    assert np.isinf(float(res.tau))       # empty selection is the only valid
+
+
+def test_rt_all_positives_includes_all():
+    a = np.linspace(0.01, 1, 500).astype(np.float32)
+    o = np.ones(500, np.float32)
+    res = thresholds.tau_ci_r(a, o, np.ones(500), 0.99, 0.05)
+    assert float(res.tau) <= float(a.min())
+
+
+def test_unoci_matches_empirical_cutoff():
+    a = np.asarray([0.9, 0.8, 0.7, 0.6, 0.5], np.float32)
+    o = np.asarray([1, 1, 0, 1, 0], np.float32)
+    res = thresholds.tau_unoci_r(a, o, 0.66)
+    # two of three positives are at 0.8+ -> recall 2/3 at tau=0.8
+    assert float(res.tau) == pytest.approx(0.8)
+
+
+def test_stage1_nmatch_upper_bounds_truth():
+    rng = np.random.default_rng(5)
+    n = 100_000
+    scores = rng.beta(0.05, 1, n).astype(np.float32)
+    labels = (rng.random(n) < scores).astype(np.float32)
+    miss = 0
+    for t in range(20):
+        idx = rng.integers(0, n, 3000)
+        m = np.ones(3000, np.float32)
+        nm, rank = thresholds.pt_stage1_nmatch(labels[idx], m, n, 0.9, 0.05)
+        miss += float(nm) < labels.sum()
+    assert miss / 20 <= 0.1
