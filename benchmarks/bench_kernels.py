@@ -54,6 +54,78 @@ def bench_linear_scan():
     print(f"kernel_linear_scan,{t_ref:.0f},maxerr={err:.2e}")
 
 
+def bench_engine_selection():
+    """SelectionEngine data-plane micro-benchmarks at 1e6 scores.
+
+    (a) vectorized searchsorted score_at vs the seed's per-element Python
+        gather loop;
+    (b) run_many over 8 RT queries on one cached engine vs 8 independent
+        cold runs (fresh engine per query = per-query sketch build + O(n)
+        weight recomputation — the seed's amortization behavior).
+    """
+    import numpy as _np
+
+    from repro.core.engine import SelectionEngine
+    from repro.core.oracle import array_oracle
+    from repro.core.queries import SUPGQuery
+
+    rng = _np.random.default_rng(0)
+    n = 1_000_000
+    scores = rng.beta(0.05, 1.0, n).astype(_np.float32)
+    labels = (rng.random(n) < scores).astype(_np.float32)
+    shards = _np.array_split(scores, 8)
+    engine = SelectionEngine(shards, num_bins=4096, use_kernel=False)
+
+    # (a) score_at vs the seed's per-element loop — both vectorized paths:
+    # the flat-cache gather (in-RAM default) and the searchsorted-routed
+    # per-shard gather (what memmap/out-of-core shards use).
+    routed = SelectionEngine(shards, num_bins=4096, use_kernel=False,
+                             cache_flat=False)
+    gi = rng.integers(0, n, 100_000)
+
+    def _seed_loop(gidx):
+        sh = _np.searchsorted(engine.offsets, gidx, side="right") - 1
+        out = _np.empty(gidx.shape[0], _np.float32)
+        for i, (s_, g) in enumerate(zip(sh, gidx)):
+            out[i] = engine.shards[s_][g - engine.offsets[s_]]
+        return out
+
+    t0 = time.perf_counter()
+    out_vec = engine.score_at(gi)
+    t_flat = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out_routed = routed.score_at(gi)
+    t_routed = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out_loop = _seed_loop(gi)
+    t_loop = time.perf_counter() - t0
+    _np.testing.assert_array_equal(out_vec, out_loop)
+    _np.testing.assert_array_equal(out_routed, out_loop)
+    print(f"engine_score_at,{t_flat * 1e6:.0f},"
+          f"routed_us={t_routed * 1e6:.0f};loop_us={t_loop * 1e6:.0f};"
+          f"speedup_flat={t_loop / t_flat:.1f}x;"
+          f"speedup_routed={t_loop / t_routed:.1f}x")
+
+    # (b) run_many batch vs independent cold runs
+    oracle = array_oracle(labels)
+    qs = [SUPGQuery(target="recall", gamma=0.9, delta=0.05, budget=1000,
+                    method="is") for _ in range(8)]
+    engine.run(jax.random.PRNGKey(0), oracle, qs[0])   # jit warmup
+
+    t0 = time.perf_counter()
+    batch_engine = SelectionEngine(shards, num_bins=4096, use_kernel=False)
+    batch_engine.run_many(jax.random.PRNGKey(1), oracle, qs)
+    t_batch = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for i, q in enumerate(qs):
+        cold = SelectionEngine(shards, num_bins=4096, use_kernel=False)
+        cold.run(jax.random.PRNGKey(100 + i), oracle, q)
+    t_cold = time.perf_counter() - t0
+    print(f"engine_run_many8,{t_batch * 1e6:.0f},"
+          f"independent_us={t_cold * 1e6:.0f};"
+          f"speedup={t_cold / t_batch:.1f}x")
+
+
 def bench_score_hist():
     s = jax.random.beta(jax.random.PRNGKey(2), 0.05, 1.0, (1 << 20,))
     t_ref = _time(sh_ops.score_hist, s, 4096, backend="ref")
@@ -66,4 +138,5 @@ def bench_score_hist():
           f"v5e_1e9rec_est={t_v5e_ms:.1f}ms")
 
 
-ALL = [bench_flash_attention, bench_linear_scan, bench_score_hist]
+ALL = [bench_flash_attention, bench_linear_scan, bench_score_hist,
+       bench_engine_selection]

@@ -7,10 +7,11 @@
 2. SERVE: run batched prefill scoring over the whole corpus with the
    pjit-able serve_prefill step, writing A(x) into a memory-mapped
    ScoreStore (the production scoring plane in miniature).
-3. SELECT: execute RT and PT SUPG queries against the exact oracle
-   (marker matching) under an oracle budget, and verify the statistical
-   guarantees + report result quality, comparing against the U-NoCI
-   baseline used by prior systems.
+3. SELECT: build a SelectionEngine directly on the memory-mapped
+   ScoreStore shard and serve a *batch* of RT / PT / JT SUPG queries
+   through `run_many` — one cached sketch + sampling state amortized
+   across the whole batch — verifying the statistical guarantees and
+   comparing against the U-NoCI baseline used by prior systems.
 """
 import tempfile
 
@@ -19,8 +20,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import (SUPGQuery, array_oracle, precision_of, recall_of,
-                        run_query)
+from repro.core import (SUPGQuery, array_oracle, precision_of, recall_of)
+from repro.core.engine import SelectionEngine
+from repro.core.queries import JointSUPGQuery
 from repro.data import synthetic
 from repro.data.pipeline import ScoreStore
 from repro.launch import serve as servelib
@@ -81,21 +83,37 @@ def main():
           f"mean A(x) pos={scores[truth].mean():.3f} "
           f"neg={scores[~truth].mean():.3f}")
 
-    print("[3/3] SUPG queries (budget=1500, delta=5%)")
+    print("[3/3] batched SUPG queries via SelectionEngine.run_many "
+          "(budget=1500, delta=5%)")
+    # The engine consumes the memory-mapped store directly (zero-copy) and
+    # builds its sketch + cached sampling state exactly once for the batch.
+    engine = SelectionEngine([store], num_bins=4096)
     oracle = array_oracle(labels)
-    for target, gamma in (("recall", 0.9), ("precision", 0.75)):
-        for method in ("is", "noci"):
-            q = SUPGQuery(target=target, gamma=gamma, delta=0.05,
-                          budget=1500, method=method)
-            res = run_query(jax.random.PRNGKey(3), scores, oracle, q)
-            p = precision_of(res.selected, truth)
-            r = recall_of(res.selected, truth)
-            a = r if target == "recall" else p
-            tag = "SUPG" if method == "is" else "U-NoCI"
-            ok = "MET " if a >= gamma else "MISS"
-            print(f"  {target:9s}>= {gamma:.0%} [{tag:6s}] {ok} "
+    batch = [SUPGQuery(target=target, gamma=gamma, delta=0.05,
+                       budget=1500, method=method)
+             for target, gamma in (("recall", 0.9), ("precision", 0.75))
+             for method in ("is", "noci")]
+    batch.append(JointSUPGQuery(gamma_recall=0.9, stage_budget=1500))
+    results = engine.run_many(jax.random.PRNGKey(3), oracle, batch)
+    for q, sel in zip(batch, results):
+        mask = np.concatenate(sel.masks)
+        selected = np.nonzero(mask)[0]
+        p = precision_of(selected, truth)
+        r = recall_of(selected, truth)
+        if isinstance(q, JointSUPGQuery):
+            ok = ("MET " if r >= q.gamma_recall
+                  and p >= q.gamma_precision else "MISS")
+            print(f"  joint r>={q.gamma_recall:.0%} p>="
+                  f"{q.gamma_precision:.0%} [JT    ] {ok} "
                   f"precision={p:.3f} recall={r:.3f} "
-                  f"|R|={len(res.selected)} calls={res.oracle_calls}")
+                  f"|R|={len(selected)} calls={sel.oracle_calls}")
+            continue
+        a = r if q.target == "recall" else p
+        tag = "SUPG" if q.method == "is" else "U-NoCI"
+        ok = "MET " if a >= q.gamma else "MISS"
+        print(f"  {q.target:9s}>= {q.gamma:.0%} [{tag:6s}] {ok} "
+              f"precision={p:.3f} recall={r:.3f} "
+              f"|R|={len(selected)} calls={sel.oracle_calls}")
 
 
 if __name__ == "__main__":

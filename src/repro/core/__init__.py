@@ -9,13 +9,13 @@ Public API:
 """
 from repro.core import bounds, sampling, thresholds
 from repro.core.oracle import BudgetedOracle, BudgetExceededError, array_oracle
-from repro.core.queries import (JointResult, QueryResult, SUPGQuery,
-                                precision_of, recall_of, run_joint_query,
-                                run_query)
+from repro.core.queries import (JointResult, JointSUPGQuery, QueryResult,
+                                SUPGQuery, precision_of, recall_of,
+                                run_joint_query, run_query)
 
 __all__ = [
     "bounds", "sampling", "thresholds",
     "BudgetedOracle", "BudgetExceededError", "array_oracle",
-    "SUPGQuery", "QueryResult", "JointResult",
+    "SUPGQuery", "QueryResult", "JointResult", "JointSUPGQuery",
     "run_query", "run_joint_query", "precision_of", "recall_of",
 ]

@@ -15,9 +15,15 @@ D'-cutoff snap is *conservative* (rounds the threshold down a bin, enlarging
 D'), which preserves validity: stage-2 restriction is an efficiency device,
 never a correctness requirement.
 
-The per-shard sketch pass is the HBM-bandwidth hot spot and has a fused
-Pallas kernel (kernels/score_hist); this module is the pure-jnp reference
-path that also runs on CPU.
+The per-shard sketch pass is the HBM-bandwidth hot spot and runs through the
+fused Pallas kernel (kernels/score_hist) by default whenever the bin count is
+tile-aligned — compiled on TPU, `interpret=True` emulation on CPU — with the
+pure-jnp scatter-add formulation kept as the reference/fallback path.
+
+`weight_normalizers` feeds the SelectionEngine's cached sampling state: the
+global Σ sqrt(A), Σ A and n extracted from one merged sketch are the only
+cross-shard quantities the defensive-mixture draw probabilities need, so the
+engine never re-reduces raw shards per query.
 """
 from __future__ import annotations
 
@@ -50,8 +56,16 @@ def bin_index(scores, num_bins=DEFAULT_BINS):
     return jnp.minimum((s * num_bins).astype(jnp.int32), num_bins - 1)
 
 
-def build_sketch(scores, num_bins=DEFAULT_BINS, use_kernel=False):
-    """One-pass sketch of a score shard. use_kernel routes to Pallas."""
+def build_sketch(scores, num_bins=DEFAULT_BINS, use_kernel=None):
+    """One-pass sketch of a score shard.
+
+    use_kernel: True forces the fused Pallas kernel, False forces the jnp
+    scatter-add reference, None (default) auto-selects the kernel whenever
+    the bin count matches its tile layout (TPU compiled / CPU interpret).
+    """
+    if use_kernel is None:
+        from repro.kernels.score_hist import ops as hist_ops
+        use_kernel = hist_ops.kernel_supported(num_bins)
     if use_kernel:
         from repro.kernels.score_hist import ops as hist_ops
         return ScoreSketch(*hist_ops.score_hist(scores, num_bins))
@@ -96,11 +110,13 @@ def selection_size(sketch: ScoreSketch, tau):
     return jnp.sum(sketch.counts * mask)
 
 
-def weight_normalizers(sketch: ScoreSketch, kappa=0.1):
-    """Global Σ sqrt(A) and Σ A — denominators for Theorem-1 / prop weights.
+def weight_normalizers(sketch: ScoreSketch):
+    """Global Σ sqrt(A), Σ A and n — denominators for Theorem-1 / prop weights.
 
-    With defensive mixing, a record x in a shard has sampling probability
+    With defensive mixing at some kappa, a record x in a shard has sampling
+    probability
         p(x) = (1-kappa) * sqrt(A(x)) / Z_sqrt + kappa / n_total
-    computable shard-locally once (Z_sqrt, n_total) are known globally.
+    computable shard-locally once (Z_sqrt, n_total) are known globally; the
+    normalizers themselves are kappa-independent.
     """
     return jnp.sum(sketch.sum_w), jnp.sum(sketch.sum_a), jnp.sum(sketch.counts)

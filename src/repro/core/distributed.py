@@ -37,7 +37,10 @@ def global_sketch(mesh: Mesh, scores, num_bins=binned.DEFAULT_BINS):
         shard_map, mesh=mesh, in_specs=(spec,),
         out_specs=P(), check_rep=False)
     def _sketch(local_scores):
-        sk = binned.build_sketch(local_scores, num_bins)
+        # Collective path stays on the jnp formulation: the fused kernel is
+        # the engine's host-local per-shard pass; inside shard_map the
+        # scatter-add lowers cleanly on every backend.
+        sk = binned.build_sketch(local_scores, num_bins, use_kernel=False)
         return binned.ScoreSketch(
             *[jax.lax.psum(x, axes) for x in sk])
 

@@ -1,26 +1,50 @@
 """Distributed SUPG selection engine — the production query executor.
 
-Ties the selection plane together over sharded score stores:
+The engine is a *precomputation-cached, vectorized, sketch-driven* data
+plane: all O(n) work happens once at construction, after which any number of
+RT / PT / JT queries are served off cached per-shard state.
 
-  1. build the global ScoreSketch (one psum of 48 KiB; Pallas score_hist
-     kernel per shard on TPU),
-  2. draw the oracle sample with exact global with-replacement semantics
-     via two-level sampling (multinomial over shard masses -> within-shard
-     inverse-CDF draws with globally-correct m(x) factors),
-  3. estimate tau with the exact sample-level estimators (Algorithms 2-5 —
-     the sample is tiny, so estimation is never distributed),
-  4. resolve the two-stage D' restriction through the sketch
-     (rank -> conservative bin edge, superset property), and
-  5. emit per-shard selection masks (zero-communication local filters).
+Construction (one pass over the shards):
 
-Shards here are host-local arrays (np / memmap via data.pipeline.ScoreStore);
-on a real fleet each worker holds its shard and the driver runs where the
-coordinator lives. Collective math matches core/distributed.py.
+  1. per-shard ScoreSketch via the fused Pallas score_hist kernel (compiled
+     on TPU, interpret-mode on CPU; jnp fallback for non-tile-aligned bin
+     counts), merged into the global sketch (one psum of 48 KiB on a fleet),
+  2. cached sampling state per (scheme, kappa): the global defensive-mixture
+     draw probabilities p(x) = (1-kappa)·raw(x)/Z + kappa/n and their
+     normalized within-shard CDFs for inverse-CDF draws — the normalizers
+     (Z_sqrt, Z_prop, n) come from `binned.weight_normalizers` on the merged
+     sketch, never from re-reducing raw shards,
+  3. shard-level sampling masses for the two-level (shard → record) draw,
+     derived from the per-shard sketches.
+
+Query execution (zero O(n) recomputation per query):
+
+  * `draw_sample`   — multinomial over cached shard masses, then vectorized
+                      inverse-CDF draws against the cached per-shard CDFs,
+                      with globally-correct m(x) factors,
+  * `score_at`      — `np.searchsorted` shard routing + per-shard fancy
+                      gathers (no per-element Python loop),
+  * tau estimation  — the exact sample-level estimators (Algorithms 2-5;
+                      the sample is tiny, so estimation is never distributed),
+  * D' restriction  — rank → conservative bin edge through the sketch
+                      (superset property),
+  * selection       — per-shard local masks, labeled positives folded in via
+                      one vectorized searchsorted scatter.
+
+`run_many` serves a *batch* of queries — SUPGQuery (RT/PT) and JointSUPGQuery
+(JT, Appendix A) — amortizing the sketch and the cached sampling state across
+the whole batch; this is the serving-plane entry point.
+
+Shards are host-local float32 arrays: plain np.ndarray, np.memmap, or
+`data.pipeline.ScoreStore` objects (consumed zero-copy through `.scores`, so
+out-of-core corpora work end-to-end). On a real fleet each worker holds its
+shard and the driver runs where the coordinator lives; the collective math
+matches core/distributed.py.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +52,7 @@ import numpy as np
 
 from repro.core import binned, sampling, thresholds
 from repro.core.oracle import BudgetedOracle
-from repro.core.queries import SUPGQuery
+from repro.core.queries import JointSUPGQuery, SUPGQuery
 
 
 @dataclasses.dataclass
@@ -40,81 +64,166 @@ class ShardedSelection:
 
     @property
     def total_selected(self) -> int:
-        return int(sum(m.sum() for m in self.masks)) + \
-            int(self.sampled_positive_global.size and
-                sum(1 for _ in ()) or 0)
+        # Labeled positives are already folded into the masks by run().
+        return int(sum(int(m.sum()) for m in self.masks))
+
+
+@dataclasses.dataclass
+class _ShardSamplingState:
+    """Cached per-shard draw state for one (scheme, kappa) pair."""
+    p_global: np.ndarray   # (n_shard,) float32 global draw probability p(x)
+    cdf: np.ndarray        # (n_shard,) float64 normalized within-shard CDF
 
 
 class SelectionEngine:
-    """Executes SUPG queries over a list of score shards."""
+    """Executes batches of SUPG queries over a list of score shards."""
 
-    def __init__(self, shards: Sequence[np.ndarray], num_bins: int = 4096,
-                 use_kernel: bool = False):
-        self.shards = [np.asarray(s, np.float32) for s in shards]
+    def __init__(self, shards: Sequence, num_bins: int = 4096,
+                 use_kernel: Optional[bool] = None,
+                 weight_schemes: Sequence[str] = ("sqrt",),
+                 kappa: float = sampling.DEFENSIVE_KAPPA,
+                 cache_flat: Optional[bool] = None):
+        # ScoreStore (or anything exposing `.scores`) passes its memmap
+        # through untouched; ndarray shards are viewed, not copied.
+        raw_shards = [getattr(s, "scores", s) for s in shards]
+        # Flat gather cache: for in-RAM shards a one-time concatenation
+        # turns score_at into a single fancy gather. Defaults off for
+        # memmap-backed (out-of-core) shards, which keep the routed path.
+        # (Decide on the raw objects: np.asarray strips the memmap subclass.)
+        if cache_flat is None:
+            cache_flat = not any(isinstance(s, np.memmap)
+                                 for s in raw_shards)
+        self.shards = [np.asarray(s) for s in raw_shards]
         self.offsets = np.concatenate(
-            [[0], np.cumsum([s.shape[0] for s in self.shards])])
+            [[0], np.cumsum([s.shape[0] for s in self.shards])]).astype(
+                np.int64)
         self.n_total = int(self.offsets[-1])
         self.num_bins = num_bins
-        # 1. global sketch: per-shard pass + merge (psum on a fleet)
-        self.sketch = binned.merge_sketches(*[
-            binned.build_sketch(jnp.asarray(s), num_bins,
+        self.kappa = float(kappa)
+        self._flat = (np.concatenate(
+            [np.asarray(s, np.float32) for s in self.shards])
+            if cache_flat and self.shards else None)
+
+        # 1. per-shard sketches (kernel path by default) + global merge.
+        self.shard_sketches = [
+            binned.build_sketch(jnp.asarray(s, jnp.float32), num_bins,
                                 use_kernel=use_kernel)
-            for s in self.shards])
+            for s in self.shards]
+        self.sketch = binned.merge_sketches(*self.shard_sketches)
+
+        # 2. global weight normalizers from the merged sketch — the only
+        #    cross-shard reductions sampling ever needs.
+        z_sqrt, z_prop, n_sk = binned.weight_normalizers(self.sketch)
+        self._z = {"sqrt": float(z_sqrt), "prop": float(z_prop)}
+        # 3. shard-level raw masses from the per-shard sketches.
+        self._shard_raw = {
+            "sqrt": np.asarray([float(jnp.sum(sk.sum_w))
+                                for sk in self.shard_sketches]),
+            "prop": np.asarray([float(jnp.sum(sk.sum_a))
+                                for sk in self.shard_sketches]),
+        }
+        self._shard_counts = np.asarray(
+            [s.shape[0] for s in self.shards], np.float64)
+
+        # 4. cached per-shard sampling state (CDFs) for the requested
+        #    schemes; other schemes build lazily on first use.
+        self._sampling_cache: Dict[Tuple[str, float], List[
+            _ShardSamplingState]] = {}
+        for scheme in weight_schemes:
+            self._sampling_state(scheme, self.kappa)
+
+    # -- cached state ---------------------------------------------------
+
+    def _sampling_state(self, scheme: str,
+                        kappa: float) -> List[_ShardSamplingState]:
+        cache_key = (scheme, float(kappa))
+        if cache_key not in self._sampling_cache:
+            z = max(self._z[scheme], 1e-30)
+            states = []
+            for scores in self.shards:
+                if scores.shape[0] == 0:
+                    states.append(_ShardSamplingState(
+                        p_global=np.empty(0, np.float32),
+                        cdf=np.empty(0, np.float64)))
+                    continue
+                a = np.clip(np.asarray(scores, np.float32), 0.0, 1.0)
+                raw = np.sqrt(a) if scheme == "sqrt" else a
+                p_global = ((1.0 - kappa) * raw / z
+                            + kappa / self.n_total).astype(np.float32)
+                states.append(_ShardSamplingState(
+                    p_global=p_global,
+                    cdf=sampling.normalized_cdf(p_global)))
+            self._sampling_cache[cache_key] = states
+        return self._sampling_cache[cache_key]
+
+    def _shard_masses(self, scheme: str, kappa: float) -> np.ndarray:
+        raws = self._shard_raw[scheme]
+        z = max(self._z[scheme], 1e-30)
+        mass = (1.0 - kappa) * raws / z \
+            + kappa * self._shard_counts / self.n_total
+        return mass / mass.sum()
 
     # -- sampling -------------------------------------------------------
 
-    def _shard_masses(self, scheme: str, kappa: float = 0.1):
-        raws = np.asarray([
-            float(np.sum(np.sqrt(np.clip(s, 0, 1)) if scheme == "sqrt"
-                         else np.clip(s, 0, 1))) for s in self.shards])
-        counts = np.asarray([s.shape[0] for s in self.shards], np.float64)
-        z = max(raws.sum(), 1e-30)
-        mass = (1 - kappa) * raws / z + kappa * counts / counts.sum()
-        return mass / mass.sum(), raws.sum(), counts.sum()
-
     def draw_sample(self, key, s: int, scheme: str = "sqrt",
-                    kappa: float = 0.1):
-        """Global with-replacement draws; returns (global_idx, m)."""
+                    kappa: Optional[float] = None):
+        """Global with-replacement draws; returns (global_idx, m).
+
+        Two-level: multinomial over cached shard masses, then vectorized
+        inverse-CDF draws against the cached per-shard CDFs. The joint draw
+        probability equals the global defensive-mixed p(x) exactly (shard
+        mass is the shard's total p(x) by construction), so
+        m(x) = (1/n) / p(x) is globally correct.
+        """
         if scheme == "uniform":
             idx = jax.random.randint(key, (s,), 0, self.n_total)
-            return np.asarray(idx), np.ones(s, np.float32)
-        mass, raw_total, n_total = self._shard_masses(scheme, kappa)
+            return np.asarray(idx, np.int64), np.ones(s, np.float32)
+        kappa = self.kappa if kappa is None else kappa
+        states = self._sampling_state(scheme, kappa)
+        mass = self._shard_masses(scheme, kappa)
         k_alloc, k_draw = jax.random.split(key)
         alloc = np.asarray(jax.random.categorical(
             k_alloc, jnp.log(jnp.asarray(mass, jnp.float32)), shape=(s,)))
+        u = np.asarray(jax.random.uniform(k_draw, (s,)), np.float64)
         out_idx = np.empty(s, np.int64)
         out_m = np.empty(s, np.float32)
-        draw_keys = jax.random.split(k_draw, len(self.shards))
-        for sh, scores in enumerate(self.shards):
+        for sh, state in enumerate(states):
             take = np.nonzero(alloc == sh)[0]
             if take.size == 0:
                 continue
-            a = np.clip(scores, 0, 1)
-            raw = np.sqrt(a) if scheme == "sqrt" else a
-            p_global = (1 - kappa) * raw / raw_total + kappa / n_total
-            p_cond = p_global / p_global.sum()
-            ws = sampling.sample_weighted(draw_keys[sh],
-                                          jnp.asarray(p_cond), take.size)
-            local = np.asarray(ws.indices)
+            local = sampling.draw_from_cdf(state.cdf, u[take])
             out_idx[take] = self.offsets[sh] + local
-            # joint draw probability = mass[sh] * p_cond = p_global exactly
-            # (mass[sh] is the shard's total p_global by construction)
-            out_m[take] = (1.0 / n_total) / np.maximum(p_global[local],
-                                                       1e-38)
+            out_m[take] = (1.0 / self.n_total) / np.maximum(
+                state.p_global[local], 1e-38)
         return out_idx, out_m
 
     def score_at(self, global_idx) -> np.ndarray:
+        """Vectorized gather: one flat fancy gather when the concatenation
+        cache is live, else searchsorted shard routing + per-shard fancy
+        indexing (works unchanged on memmap shards)."""
         gi = np.asarray(global_idx, np.int64)
+        if self._flat is not None:
+            return self._flat[gi]
         sh = np.searchsorted(self.offsets, gi, side="right") - 1
+        local = gi - self.offsets[sh]
         out = np.empty(gi.shape[0], np.float32)
-        for i, (s, g) in enumerate(zip(sh, gi)):
-            out[i] = self.shards[s][g - self.offsets[s]]
+        # Group draws by shard with one argsort, then gather each shard's
+        # segment with a single fancy index (one touch per shard).
+        order = np.argsort(sh, kind="stable")
+        seg_bounds = np.searchsorted(sh[order],
+                                     np.arange(len(self.shards) + 1))
+        for shard_id in range(len(self.shards)):
+            seg = order[seg_bounds[shard_id]:seg_bounds[shard_id + 1]]
+            if seg.size:
+                out[seg] = np.asarray(
+                    self.shards[shard_id][local[seg]], np.float32)
         return out
 
     # -- query ----------------------------------------------------------
 
     def run(self, key, oracle_fn: Callable, query: SUPGQuery) \
             -> ShardedSelection:
+        key = jax.random.PRNGKey(0) if key is None else key
         oracle = BudgetedOracle(oracle_fn, query.budget)
         s = query.budget
         if query.target == "recall":
@@ -160,34 +269,98 @@ class SelectionEngine:
                         min_step=query.min_step)
             tau = float(res.tau)
 
-        masks = [s_arr >= tau for s_arr in self.shards]
+        masks = [np.asarray(s_arr >= tau) for s_arr in self.shards]
         pos = oracle.labeled_positives()
-        # fold labeled positives into their shard masks
-        for g in pos:
-            sh = int(np.searchsorted(self.offsets, g, side="right") - 1)
-            masks[sh][g - self.offsets[sh]] = True
+        self._fold_positives(masks, pos)
         return ShardedSelection(masks=masks, tau=tau,
                                 oracle_calls=oracle.calls_used,
                                 sampled_positive_global=pos)
 
+    def run_joint(self, key, oracle_fn: Callable,
+                  query: JointSUPGQuery) -> ShardedSelection:
+        """Engine-level JT query (Appendix A): RT stage at gamma_recall,
+        then exhaustive oracle filtering of the candidate set. The returned
+        masks hold only oracle-verified positives (precision exactly 1.0);
+        oracle usage beyond the RT stage is unbounded by design."""
+        rt = SUPGQuery(target="recall", gamma=query.gamma_recall,
+                       delta=query.delta, budget=query.stage_budget,
+                       method=query.method)
+        sel = self.run(key, oracle_fn, rt)
+        oracle = BudgetedOracle(oracle_fn, budget=self.n_total)
+        masks = []
+        for sh, m in enumerate(sel.masks):
+            local = np.nonzero(m)[0]
+            keep = np.zeros_like(m)
+            if local.size:
+                labels = oracle(self.offsets[sh] + local)
+                keep[local] = labels > 0.5
+            masks.append(keep)
+        return ShardedSelection(
+            masks=masks, tau=sel.tau,
+            oracle_calls=sel.oracle_calls + oracle.calls_used,
+            sampled_positive_global=sel.sampled_positive_global)
+
+    def run_many(self, key, oracle_fn: Callable,
+                 queries: Sequence[Union[SUPGQuery, JointSUPGQuery]]) \
+            -> List[ShardedSelection]:
+        """Serve a batch of RT / PT / JT queries off one cached state.
+
+        The sketch, shard masses, and per-scheme CDFs were built once at
+        construction; each query only pays O(s) sampling + O(n) mask
+        emission. Budgets are accounted per query (each gets its own
+        BudgetedOracle), matching independent `run` calls semantically.
+        """
+        keys = jax.random.split(
+            jax.random.PRNGKey(0) if key is None else key, len(queries))
+        out = []
+        for k, q in zip(keys, queries):
+            if isinstance(q, JointSUPGQuery):
+                out.append(self.run_joint(k, oracle_fn, q))
+            else:
+                out.append(self.run(k, oracle_fn, q))
+        return out
+
+    # -- helpers --------------------------------------------------------
+
+    def _fold_positives(self, masks: List[np.ndarray], pos: np.ndarray):
+        """Fold labeled positives into their shard masks (Algorithm 1's R1)
+        via one vectorized searchsorted route + per-shard scatter."""
+        if pos.size == 0:
+            return
+        sh = np.searchsorted(self.offsets, pos, side="right") - 1
+        local = pos - self.offsets[sh]
+        for shard_id in np.unique(sh):
+            masks[shard_id][local[sh == shard_id]] = True
+
     def _uniform_in_region(self, key, s, tau):
-        """Uniform draws from {A >= tau} across shards."""
-        counts = np.asarray([(sh >= tau).sum() for sh in self.shards],
-                            np.float64)
-        mass = counts / max(counts.sum(), 1)
+        """Uniform draws from {A >= tau} across shards.
+
+        Shards whose region is empty get exactly zero categorical mass (no
+        floor), so draws can never be clamped onto records below tau. If the
+        region is globally empty the draws fall back to uniform over all
+        records — tau estimation then sees an unrestricted uniform sample,
+        which keeps the estimator valid (D' restriction is an efficiency
+        device, never a correctness requirement).
+        """
+        counts = np.asarray([int((np.asarray(sh) >= tau).sum())
+                             for sh in self.shards], np.float64)
+        total = counts.sum()
+        if total == 0:
+            idx = jax.random.randint(key, (s,), 0, self.n_total)
+            return np.asarray(idx, np.int64)
+        mass = counts / total
         k_alloc, k_draw = jax.random.split(key)
+        # log(0) = -inf => empty shards are excluded from the categorical.
         alloc = np.asarray(jax.random.categorical(
-            k_alloc, jnp.log(jnp.asarray(np.maximum(mass, 1e-30),
-                                         jnp.float32)), shape=(s,)))
+            k_alloc, jnp.log(jnp.asarray(mass, jnp.float32)), shape=(s,)))
         out = np.empty(s, np.int64)
         dkeys = jax.random.split(k_draw, len(self.shards))
         for sh, scores in enumerate(self.shards):
             take = np.nonzero(alloc == sh)[0]
             if take.size == 0:
                 continue
-            region = np.nonzero(scores >= tau)[0]
+            region = np.nonzero(np.asarray(scores) >= tau)[0]
             pick = np.asarray(jax.random.randint(
-                dkeys[sh], (take.size,), 0, max(region.size, 1)))
-            out[take] = self.offsets[sh] + region[np.minimum(
-                pick, max(region.size - 1, 0))]
+                dkeys[sh], (take.size,), 0, region.size))
+            out[take] = self.offsets[sh] + region[pick]
         return out

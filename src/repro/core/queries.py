@@ -76,6 +76,8 @@ def run_query(key, scores, oracle_fn, query: SUPGQuery) -> QueryResult:
     """
     scores = np.asarray(jax.device_get(scores), np.float32)
     n = scores.shape[0]
+    # Normalize the key once so RT and PT accept key=None identically.
+    key = jax.random.PRNGKey(0) if key is None else key
     oracle = BudgetedOracle(oracle_fn, query.budget)
     s = query.budget
 
@@ -109,7 +111,7 @@ def _run_rt(key, scores, oracle, s, q):
 
 
 def _run_pt(key, scores, oracle, s, q):
-    k0, k1 = jax.random.split(jax.random.PRNGKey(0) if key is None else key)
+    k0, k1 = jax.random.split(key)
     if q.method == "noci":
         sample = sampling.draw_oracle_sample(k0, scores, s, scheme="uniform")
         o_s = _labels_for(sample, oracle)
@@ -154,6 +156,28 @@ def _run_pt(key, scores, oracle, s, q):
 # ---------------------------------------------------------------------------
 # Joint-target queries (Appendix A)
 # ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class JointSUPGQuery:
+    """Declarative JT query spec for the engine's batched `run_many` plane.
+
+    Semantics match `run_joint_query`: an RT stage at gamma_recall under
+    stage_budget, then exhaustive oracle filtering of the candidate set
+    (which makes the achieved precision exactly 1.0 >= gamma_precision;
+    total oracle usage is unbounded by design, Appendix A).
+    """
+    gamma_recall: float
+    gamma_precision: float = 1.0
+    delta: float = 0.05
+    stage_budget: int = 10_000
+    method: str = "is"
+
+    def __post_init__(self):
+        if not 0.0 < self.gamma_recall < 1.0:
+            raise ValueError("gamma_recall must lie in (0,1)")
+        if not 0.0 < self.gamma_precision <= 1.0:
+            raise ValueError("gamma_precision must lie in (0,1]")
+
 
 @dataclasses.dataclass
 class JointResult:

@@ -20,6 +20,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 DEFENSIVE_KAPPA = 0.1  # mass of the uniform mixture component (paper: 0.1)
 
@@ -112,6 +113,31 @@ def sample_weighted_masked(key, probs, mask, s):
     w_drawn = probs[idx]
     m = (1.0 / n_sub) / jnp.maximum(w_drawn, 1e-38)
     return WeightedSample(idx, m, w_drawn)
+
+
+# ---------------------------------------------------------------------------
+# Host-side CDF primitives for the engine's cached sampling state
+# ---------------------------------------------------------------------------
+# The SelectionEngine precomputes one normalized CDF per (shard, scheme) at
+# construction and then serves every query's within-shard draws by inverse-
+# CDF lookup — no per-query O(n) weight recomputation. float64 keeps the
+# prefix sums exact enough at 1e8+ records per shard that the final entry is
+# a faithful normalizer (fp32 cumsum loses ~2 decimal digits at that scale).
+
+def normalized_cdf(weights) -> np.ndarray:
+    """Inclusive float64 prefix CDF, renormalized to end exactly at 1."""
+    w = np.asarray(weights, np.float64)
+    cdf = np.cumsum(w)
+    total = cdf[-1] if cdf.size else 0.0
+    if not total > 0:
+        raise ValueError("normalized_cdf needs positive total mass")
+    return cdf / total
+
+
+def draw_from_cdf(cdf: np.ndarray, u) -> np.ndarray:
+    """Vectorized inverse-CDF draws: indices such that cdf[i-1] <= u < cdf[i]."""
+    idx = np.searchsorted(cdf, np.asarray(u, np.float64), side="left")
+    return np.minimum(idx, cdf.shape[0] - 1).astype(np.int64)
 
 
 @functools.partial(jax.jit, static_argnames=("s", "scheme", "defensive"))

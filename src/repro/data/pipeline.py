@@ -102,5 +102,14 @@ class ScoreStore:
         return np.asarray(self._arr[start:end])
 
     @property
+    def scores(self) -> np.ndarray:
+        """Zero-copy memmap view — SelectionEngine consumes stores directly
+        through this so out-of-core shards never materialize in RAM."""
+        return self._arr
+
+    def __len__(self) -> int:
+        return self._arr.shape[0]
+
+    @property
     def num_scored(self) -> int:
         return int((self._arr >= 0).sum())

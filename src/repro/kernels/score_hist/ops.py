@@ -1,4 +1,9 @@
-"""Jit'd public wrapper for the fused score sketch."""
+"""Jit'd public wrapper for the fused score sketch.
+
+`backend="auto"` (the default) runs the Pallas kernel compiled on TPU and
+falls back to `interpret=True` emulation everywhere else, so callers can
+treat the fused kernel as the default sketch path without platform checks.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,12 +11,20 @@ import functools
 import jax
 
 from repro.kernels.score_hist import ref
+from repro.kernels.score_hist.score_hist import _BIN_TILE
 from repro.kernels.score_hist.score_hist import score_hist as _kernel
+
+
+def kernel_supported(num_bins: int) -> bool:
+    """Whether the fused kernel's bin-tile layout covers this bin count."""
+    return num_bins % _BIN_TILE == 0
 
 
 @functools.partial(jax.jit,
                    static_argnames=("num_bins", "backend", "block_n"))
-def score_hist(scores, num_bins=4096, *, backend="interpret", block_n=2048):
+def score_hist(scores, num_bins=4096, *, backend="auto", block_n=2048):
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "interpret"
     if backend == "ref":
         return ref.score_hist_ref(scores, num_bins)
     return _kernel(scores, num_bins=num_bins, block_n=block_n,

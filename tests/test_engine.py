@@ -1,0 +1,190 @@
+"""SelectionEngine data-plane tests: cached-state sampling, vectorized
+gathers, regression fixes, run_many batching, and equivalence against the
+single-host exact path."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import queries
+from repro.core.engine import SelectionEngine, ShardedSelection
+from repro.core.oracle import array_oracle
+from repro.core.queries import JointSUPGQuery, SUPGQuery
+from repro.data.pipeline import ScoreStore
+from repro.data.synthetic import make_beta
+
+
+# -- regression: total_selected ---------------------------------------------
+
+def test_total_selected_is_mask_sum():
+    """Regression: the seed carried a dead expression that always added 0;
+    total_selected must equal the plain sum over shard masks."""
+    masks = [np.array([True, False, True]), np.array([False, True])]
+    sel = ShardedSelection(masks=masks, tau=0.5, oracle_calls=7,
+                           sampled_positive_global=np.array([0, 4]))
+    assert sel.total_selected == 3
+
+
+# -- regression: empty shards in _uniform_in_region -------------------------
+
+def test_uniform_in_region_excludes_empty_shards():
+    """Shards whose region {A >= tau} is empty must receive zero draws —
+    the seed floored their mass at 1e-30 and then clamp-returned records
+    *below* tau."""
+    lo = np.zeros(1000, np.float32)             # region empty at tau=0.5
+    hi = np.full(500, 0.9, np.float32)
+    engine = SelectionEngine([lo, hi], num_bins=512)
+    idx = engine._uniform_in_region(jax.random.PRNGKey(0), 300, 0.5)
+    assert np.all(idx >= 1000)                  # never from the empty shard
+    assert np.all(engine.score_at(idx) >= 0.5)
+
+
+def test_uniform_in_region_globally_empty_falls_back_to_uniform():
+    engine = SelectionEngine([np.zeros(100, np.float32),
+                              np.zeros(50, np.float32)], num_bins=512)
+    idx = engine._uniform_in_region(jax.random.PRNGKey(1), 64, 0.5)
+    assert idx.shape == (64,)
+    assert np.all((idx >= 0) & (idx < 150))
+
+
+# -- vectorized gathers ------------------------------------------------------
+
+def test_score_at_matches_elementwise_gather():
+    rng = np.random.default_rng(0)
+    shards = [rng.random(n).astype(np.float32) for n in (1000, 1, 2500, 700)]
+    flat = np.concatenate(shards)
+    gi = rng.integers(0, flat.shape[0], 5000)
+    # both gather paths: flat concatenation cache and routed per-shard
+    fast = SelectionEngine(shards, num_bins=512)
+    routed = SelectionEngine(shards, num_bins=512, cache_flat=False)
+    assert fast._flat is not None and routed._flat is None
+    np.testing.assert_array_equal(fast.score_at(gi), flat[gi])
+    np.testing.assert_array_equal(routed.score_at(gi), flat[gi])
+
+
+def test_fold_positives_vectorized():
+    shards = [np.zeros(100, np.float32), np.zeros(50, np.float32)]
+    engine = SelectionEngine(shards, num_bins=512)
+    masks = [np.zeros(100, bool), np.zeros(50, bool)]
+    engine._fold_positives(masks, np.asarray([0, 99, 100, 149], np.int64))
+    assert masks[0][0] and masks[0][99] and masks[1][0] and masks[1][49]
+    assert masks[0].sum() == 2 and masks[1].sum() == 2
+
+
+# -- cached sampling state ---------------------------------------------------
+
+def test_draw_sample_reweighting_unbiased_from_cache():
+    """m(x) factors from the sketch-derived cached CDFs stay unbiased."""
+    ds = make_beta(80_000, 0.05, 1.0, seed=6)
+    engine = SelectionEngine(np.array_split(ds.scores, 3), num_bins=1024)
+    idx, m = engine.draw_sample(jax.random.PRNGKey(1), 20_000, "sqrt")
+    est = float(np.mean(ds.labels[idx] * m))
+    assert est == pytest.approx(float(ds.labels.mean()), rel=0.2)
+    # second draw hits the cache — same state object, no rebuild
+    assert len(engine._sampling_cache) == 1
+    engine.draw_sample(jax.random.PRNGKey(2), 100, "sqrt")
+    assert len(engine._sampling_cache) == 1
+
+
+def test_scorestore_shards_work_end_to_end(tmp_path):
+    ds = make_beta(40_000, 0.02, 1.0, seed=8)
+    halves = np.array_split(ds.scores, 2)
+    stores = []
+    for i, half in enumerate(halves):
+        st = ScoreStore(tmp_path / f"shard{i}.scores", half.shape[0],
+                        create=True)
+        st.write(0, half)
+        stores.append(st)
+    engine = SelectionEngine(stores, num_bins=1024)
+    assert engine.n_total == 40_000
+    # out-of-core shards must NOT be concatenated into a RAM flat cache
+    assert engine._flat is None
+    q = SUPGQuery(target="recall", gamma=0.9, delta=0.05, budget=3000,
+                  method="is")
+    sel = engine.run(jax.random.PRNGKey(3), array_oracle(ds.labels), q)
+    mask = np.concatenate(sel.masks)
+    assert queries.recall_of(np.nonzero(mask)[0], ds.truth_mask()) >= 0.85
+    assert sel.oracle_calls <= 3000
+
+
+# -- run_many ----------------------------------------------------------------
+
+def test_run_many_batches_rt_pt_jt():
+    ds = make_beta(100_000, 0.01, 1.0, seed=12)
+    engine = SelectionEngine(np.array_split(ds.scores, 4), num_bins=1024)
+    oracle = array_oracle(ds.labels)
+    batch = [
+        SUPGQuery(target="recall", gamma=0.9, delta=0.05, budget=3000,
+                  method="is"),
+        SUPGQuery(target="precision", gamma=0.9, delta=0.05, budget=3000,
+                  method="is"),
+        JointSUPGQuery(gamma_recall=0.8, stage_budget=3000),
+    ]
+    results = engine.run_many(jax.random.PRNGKey(5), oracle, batch)
+    assert len(results) == 3
+    truth = ds.truth_mask()
+    rt_mask = np.concatenate(results[0].masks)
+    assert queries.recall_of(np.nonzero(rt_mask)[0], truth) >= 0.85
+    pt_mask = np.concatenate(results[1].masks)
+    assert queries.precision_of(np.nonzero(pt_mask)[0], truth) >= 0.8
+    # JT: exhaustive filtering => precision exactly 1.0, recall from RT stage
+    jt_mask = np.concatenate(results[2].masks)
+    assert queries.precision_of(np.nonzero(jt_mask)[0], truth) == \
+        pytest.approx(1.0)
+    assert queries.recall_of(np.nonzero(jt_mask)[0], truth) >= 0.75
+    assert results[2].oracle_calls > 3000    # stage-3 usage is unbounded
+    # budgets stay per-query for plain queries
+    for r in results[:2]:
+        assert r.oracle_calls <= 3000
+
+
+def test_run_many_matches_independent_runs():
+    """run_many is a batching device, not a semantics change: with matched
+    per-query keys it returns exactly what independent run() calls do."""
+    ds = make_beta(50_000, 0.02, 1.0, seed=14)
+    engine = SelectionEngine(np.array_split(ds.scores, 3), num_bins=1024)
+    oracle = array_oracle(ds.labels)
+    qs = [SUPGQuery(target="recall", gamma=0.85, budget=2000, method="is"),
+          SUPGQuery(target="precision", gamma=0.8, budget=2000,
+                    method="noci")]
+    key = jax.random.PRNGKey(21)
+    batched = engine.run_many(key, oracle, qs)
+    keys = jax.random.split(key, 2)
+    for k, q, b in zip(keys, qs, batched):
+        solo = engine.run(k, oracle, q)
+        assert solo.tau == b.tau
+        np.testing.assert_array_equal(np.concatenate(solo.masks),
+                                      np.concatenate(b.masks))
+
+
+# -- equivalence: engine vs single-host exact path ---------------------------
+
+def test_engine_consistent_with_run_query():
+    """The sharded, sketch-backed engine and the single-host exact path must
+    select statistically consistent sets at matched seeds/budgets: both meet
+    their target (allowing one delta-level miss across seeds) and the
+    selected-set sizes agree within a small factor."""
+    ds = make_beta(60_000, 0.01, 1.0, seed=30)
+    truth = ds.truth_mask()
+    oracle = array_oracle(ds.labels)
+    engine = SelectionEngine(np.array_split(ds.scores, 4), num_bins=1024)
+
+    for target, gamma, metric in (
+            ("recall", 0.9, queries.recall_of),
+            ("precision", 0.8, queries.precision_of)):
+        q = SUPGQuery(target=target, gamma=gamma, delta=0.05, budget=3000,
+                      method="is")
+        misses_engine = misses_exact = 0
+        for t in range(3):
+            key = jax.random.PRNGKey(100 + t)
+            sel = engine.run(key, oracle, q)
+            res = queries.run_query(key, ds.scores, oracle, q)
+            got_e = metric(np.nonzero(np.concatenate(sel.masks))[0], truth)
+            got_x = metric(res.selected, truth)
+            misses_engine += got_e < gamma
+            misses_exact += got_x < gamma
+            n_e = max(sel.total_selected, 1)
+            n_x = max(res.selected.shape[0], 1)
+            assert 1 / 5 < n_e / n_x < 5, (target, t, n_e, n_x)
+        assert misses_engine <= 1, target
+        assert misses_exact <= 1, target

@@ -17,12 +17,11 @@ _SCRIPT = textwrap.dedent("""
     import sys; sys.path.insert(0, "src")
     import dataclasses
     import jax, jax.numpy as jnp
-    from jax.sharding import AxisType
     from repro.models import attention, meshctx, moe
     from repro.configs import get_smoke_config
+    from repro.launch.mesh import _make_mesh
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,)*2)
+    mesh = _make_mesh((2, 4), ("data", "model"))
 
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     b, s, h, kv, dh = 2, 1024, 6, 2, 64

@@ -59,6 +59,23 @@ def test_joint_query_achieves_both_targets():
     assert res.oracle_calls > 4000         # stage-3 usage is unbounded
 
 
+def test_key_none_accepted_by_rt_and_pt():
+    """Regression: key=None used to crash _run_rt (jax.random.split(None))
+    while _run_pt silently defaulted; both now normalize identically."""
+    ds = make_beta(20_000, 0.02, 1.0, seed=19)
+    oracle = array_oracle(ds.labels)
+    for target in ("recall", "precision"):
+        q = queries.SUPGQuery(target=target, gamma=0.8, delta=0.05,
+                              budget=1500, method="is")
+        res = queries.run_query(None, ds.scores, oracle, q)
+        assert np.isfinite(res.tau) or res.tau in (float("inf"),
+                                                   float("-inf"))
+        # and matches the explicit default key
+        res2 = queries.run_query(jax.random.PRNGKey(0), ds.scores,
+                                 array_oracle(ds.labels), q)
+        assert res.tau == res2.tau
+
+
 def test_query_validation():
     with pytest.raises(ValueError):
         queries.SUPGQuery(target="f1", gamma=0.9)

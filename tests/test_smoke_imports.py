@@ -1,0 +1,28 @@
+"""Collection smoke test: import every repro.* module in one place.
+
+Version-compat import breaks (e.g. a jax API that moved between releases)
+should fail loudly here, as one parametrized case per module, instead of
+knocking out whole test modules at collection time.
+"""
+import importlib
+import pkgutil
+
+import pytest
+
+import repro
+
+# repro.launch.dryrun force-sets XLA_FLAGS at import (device-count override)
+# and is a CLI entry point, not a library module.
+EXCLUDE = {"repro.launch.dryrun"}
+
+
+def _all_modules():
+    names = ["repro"]
+    for info in pkgutil.walk_packages(repro.__path__, prefix="repro."):
+        names.append(info.name)
+    return sorted(set(names) - EXCLUDE)
+
+
+@pytest.mark.parametrize("name", _all_modules())
+def test_module_imports(name):
+    importlib.import_module(name)
