@@ -59,7 +59,9 @@ def bench_engine_selection():
 
     (a) vectorized searchsorted score_at vs the seed's per-element Python
         gather loop;
-    (b) run_many over 8 RT queries on one cached engine vs 8 independent
+    (b) engine cold-build (sketch + cached sampling state) — the
+        trajectory row CI tracks per commit;
+    (c) run_many over 8 RT queries on one cached engine vs 8 independent
         cold runs (fresh engine per query = per-query sketch build + O(n)
         weight recomputation — the seed's amortization behavior).
     """
@@ -106,7 +108,14 @@ def bench_engine_selection():
           f"speedup_flat={t_loop / t_flat:.1f}x;"
           f"speedup_routed={t_loop / t_routed:.1f}x")
 
-    # (b) run_many batch vs independent cold runs
+    # (b) engine cold-build (sketch + cached sampling state, no queries) —
+    # the trajectory row CI tracks per commit.
+    t0 = time.perf_counter()
+    SelectionEngine(shards, num_bins=4096, use_kernel=False)
+    t_build = time.perf_counter() - t0
+    print(f"engine_cold_build,{t_build * 1e6:.0f},n=1e6;shards=8")
+
+    # (c) run_many batch vs independent cold runs
     oracle = array_oracle(labels)
     qs = [SUPGQuery(target="recall", gamma=0.9, delta=0.05, budget=1000,
                     method="is") for _ in range(8)]
@@ -126,6 +135,37 @@ def bench_engine_selection():
           f"speedup={t_cold / t_batch:.1f}x")
 
 
+def bench_threshold_select():
+    """Streaming-emission pass throughput at 1e6 / 1e7 records.
+
+    Times the platform-default backend the engine streams through (numpy
+    nonzero reference on CPU, compiled Pallas on TPU) and cross-checks the
+    interpret-mode kernel against the reference at 1e6.
+    """
+    from repro.kernels.threshold_select import ops as ts_ops
+
+    rng = np.random.default_rng(3)
+    tau = 0.8
+    for n, label in ((1_000_000, "1e6"), (10_000_000, "1e7")):
+        s = rng.beta(0.05, 1.0, n).astype(np.float32)
+        backend = ts_ops.default_backend()
+        ts_ops.threshold_select(s, tau, backend=backend)   # warmup
+        reps = 3
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = ts_ops.threshold_select(s, tau, backend=backend)
+        t_us = (time.perf_counter() - t0) / reps * 1e6
+        recs_per_s = n / (t_us / 1e6)
+        extra = ""
+        if n == 1_000_000:
+            kern = ts_ops.threshold_select(s, tau, backend="interpret")
+            extra = (";kernel_match="
+                     f"{int(np.array_equal(kern, out))}")
+        print(f"kernel_threshold_select_{label},{t_us:.0f},"
+              f"backend={backend};selected={out.size};"
+              f"recs_per_s={recs_per_s:.3e}{extra}")
+
+
 def bench_score_hist():
     s = jax.random.beta(jax.random.PRNGKey(2), 0.05, 1.0, (1 << 20,))
     t_ref = _time(sh_ops.score_hist, s, 4096, backend="ref")
@@ -139,4 +179,4 @@ def bench_score_hist():
 
 
 ALL = [bench_flash_attention, bench_linear_scan, bench_score_hist,
-       bench_engine_selection]
+       bench_threshold_select, bench_engine_selection]

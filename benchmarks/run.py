@@ -5,12 +5,38 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
   bench_kernels  — per-kernel allclose + reference timings
   roofline       — per-(arch x shape) roofline terms from results/dryrun.json
                    (skipped silently if the dry-run artifact is absent)
+
+``--json PATH`` additionally writes every captured row to a
+machine-readable trajectory file (CI uploads it as the BENCH_PR2.json
+artifact per commit; ``--fast --json`` is the quick tier CI runs, covering
+engine cold-build, the run_many batch, and threshold_select throughput at
+1e6/1e7 records).
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
+import io
+import json
+import platform
+import re
 import sys
+import time
 import traceback
+
+_ROW_RE = re.compile(r"^([A-Za-z0-9_.-]+),([-+0-9.eE]+)(?:,(.*))?$")
+
+
+def _parse_rows(text: str):
+    """Parse ``name,us_per_call[,derived]`` CSV rows out of bench output."""
+    rows = []
+    for line in text.splitlines():
+        m = _ROW_RE.match(line.strip())
+        if m:
+            rows.append({"name": m.group(1),
+                         "us_per_call": float(m.group(2)),
+                         "derived": m.group(3) or ""})
+    return rows
 
 
 def main() -> None:
@@ -19,6 +45,9 @@ def main() -> None:
                     help="substring filter on benchmark names")
     ap.add_argument("--fast", action="store_true",
                     help="skip the slow statistical sweeps")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write captured rows as a machine-readable "
+                         "trajectory file (e.g. BENCH_PR2.json)")
     args = ap.parse_args()
 
     from benchmarks import bench_kernels, paper_figures
@@ -34,14 +63,23 @@ def main() -> None:
     benches += [(f.__name__, f) for f in bench_kernels.ALL]
 
     failed = []
+    rows = []
+    t_start = time.time()
     for name, fn in benches:
         if args.only and args.only not in name:
             continue
+        buf = io.StringIO()
         try:
-            fn()
+            with contextlib.redirect_stdout(buf):
+                fn()
         except Exception:  # noqa: BLE001
+            sys.stdout.write(buf.getvalue())
             traceback.print_exc()
             failed.append(name)
+            continue
+        out = buf.getvalue()
+        sys.stdout.write(out)
+        rows += _parse_rows(out)
 
     try:
         from benchmarks import roofline
@@ -51,6 +89,23 @@ def main() -> None:
     except Exception:  # noqa: BLE001
         traceback.print_exc()
         failed.append("roofline")
+
+    if args.json:
+        import jax
+        payload = {
+            "schema_version": 1,
+            "suite": "fast" if args.fast else "full",
+            "wall_seconds": round(time.time() - t_start, 3),
+            "backend": jax.default_backend(),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "failed": failed,
+            "rows": rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {len(rows)} rows -> {args.json}")
 
     if failed:
         print(f"FAILED benchmarks: {failed}", file=sys.stderr)

@@ -71,12 +71,15 @@ def build_sketch(scores, num_bins=DEFAULT_BINS, use_kernel=None):
         return ScoreSketch(*hist_ops.score_hist(scores, num_bins))
     scores = jnp.asarray(scores, jnp.float32)
     idx = bin_index(scores, num_bins)
-    ones = jnp.ones_like(scores)
-    counts = jnp.zeros(num_bins, jnp.float32).at[idx].add(ones)
+    # Mask the -1 "unscored" sentinel exactly like the kernel path does —
+    # partially-scored ScoreStore shards must sketch identically across
+    # backends (the sentinel used to be clipped into bin 0 here).
+    valid = (scores >= 0.0).astype(jnp.float32)
+    a = jnp.clip(scores, 0.0, 1.0)
+    counts = jnp.zeros(num_bins, jnp.float32).at[idx].add(valid)
     sum_w = jnp.zeros(num_bins, jnp.float32).at[idx].add(
-        jnp.sqrt(jnp.clip(scores, 0.0, 1.0)))
-    sum_a = jnp.zeros(num_bins, jnp.float32).at[idx].add(
-        jnp.clip(scores, 0.0, 1.0))
+        jnp.sqrt(a) * valid)
+    sum_a = jnp.zeros(num_bins, jnp.float32).at[idx].add(a * valid)
     return ScoreSketch(counts, sum_w, sum_a)
 
 

@@ -28,18 +28,42 @@ Query execution (zero O(n) recomputation per query):
                       the sample is tiny, so estimation is never distributed),
   * D' restriction  — rank → conservative bin edge through the sketch
                       (superset property),
-  * selection       — per-shard local masks, labeled positives folded in via
-                      one vectorized searchsorted scatter.
+  * selection       — *streamed*, never materialized: each shard is walked
+                      in fixed-size chunks through the fused
+                      `kernels/threshold_select` pass (compare + count +
+                      index compaction; compiled on TPU, numpy nonzero
+                      reference off-TPU) and the selected indices are
+                      emitted into a `data.pipeline.SelectionSink`
+                      (in-memory `IndexSink` by default, memmap
+                      `BitmaskStore` for out-of-core output, `CallbackSink`
+                      / `SelectionStream` for service streaming). Labeled
+                      positives (Algorithm 1's R1) are folded in as a
+                      sink-level merge of the positives *below* tau, so
+                      emission and folding stay disjoint and per-shard
+                      counts are exact without dedup state.
+
+A query over a 1e8-record memmap store therefore peaks at O(chunk) host
+memory: no full-corpus boolean mask is ever allocated, `ShardedSelection`
+is a lazy view whose `total_selected` comes from per-shard counts, boolean
+masks only materialize if a caller explicitly asks for them, and the PT
+stage-2 uniform-in-D' draw is rank-routed through the same chunked pass.
+(The one remaining O(n) surface is the cached per-record inverse-CDF state
+behind importance-weighted sampling — construct with `weight_schemes=()`
+and use uniform/noci-method queries for fully bounded memory today; see
+the ROADMAP open item for chunking that state.)
 
 `run_many` serves a *batch* of queries — SUPGQuery (RT/PT) and JointSUPGQuery
 (JT, Appendix A) — amortizing the sketch and the cached sampling state across
-the whole batch; this is the serving-plane entry point.
+the whole batch; this is the serving-plane entry point. Per-query sinks make
+it the streaming fan-out point for a service.
 
 Shards are host-local float32 arrays: plain np.ndarray, np.memmap, or
 `data.pipeline.ScoreStore` objects (consumed zero-copy through `.scores`, so
-out-of-core corpora work end-to-end). On a real fleet each worker holds its
-shard and the driver runs where the coordinator lives; the collective math
-matches core/distributed.py.
+out-of-core corpora work end-to-end; sketch construction over shards larger
+than `chunk_records` is itself chunked and merged, so even engine build never
+materializes a full shard). On a real fleet each worker holds its shard and
+the driver runs where the coordinator lives; the collective math matches
+core/distributed.py.
 """
 from __future__ import annotations
 
@@ -53,19 +77,83 @@ import numpy as np
 from repro.core import binned, sampling, thresholds
 from repro.core.oracle import BudgetedOracle
 from repro.core.queries import JointSUPGQuery, SUPGQuery
+from repro.data import pipeline
+from repro.kernels.threshold_select import ops as select_ops
 
 
-@dataclasses.dataclass
 class ShardedSelection:
-    masks: List[np.ndarray]        # per-shard boolean selection masks
-    tau: float
-    oracle_calls: int
-    sampled_positive_global: np.ndarray   # global ids of labeled positives
+    """Lazy view over one query's selection.
+
+    Sink-backed (the engine's streaming output) or mask-backed (direct
+    construction, kept for compatibility). In the sink-backed form nothing
+    O(corpus) lives here: `total_selected` and `shard_counts` come from the
+    per-shard counts the sink accumulated during emission, `indices(shard)`
+    reads the sink, and `masks` materializes per-shard boolean views only
+    when explicitly accessed (state-holding sinks only — a CallbackSink
+    selection retains counts alone).
+    """
+
+    def __init__(self, masks: Optional[List[np.ndarray]] = None,
+                 tau: float = 0.0, oracle_calls: int = 0,
+                 sampled_positive_global: Optional[np.ndarray] = None,
+                 sink: Optional[pipeline.SelectionSink] = None,
+                 shard_sizes: Optional[Sequence[int]] = None,
+                 counts: Optional[np.ndarray] = None):
+        if masks is None and sink is None:
+            raise ValueError("need per-shard masks or a SelectionSink")
+        self.tau = float(tau)
+        self.oracle_calls = int(oracle_calls)
+        self.sampled_positive_global = (
+            np.empty(0, np.int64) if sampled_positive_global is None
+            else np.asarray(sampled_positive_global, np.int64))
+        self.sink = sink
+        self._masks = list(masks) if masks is not None else None
+        if shard_sizes is None:
+            if self._masks is not None:
+                shard_sizes = [int(m.shape[0]) for m in self._masks]
+            elif getattr(sink, "shard_sizes", None) is not None:
+                shard_sizes = sink.shard_sizes   # an opened sink knows them
+            else:
+                raise ValueError(
+                    "shard_sizes required when the sink has not been opened")
+        self.shard_sizes = [int(n) for n in shard_sizes]
+        self._counts = (None if counts is None
+                        else np.asarray(counts, np.int64))
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shard_sizes)
+
+    @property
+    def shard_counts(self) -> np.ndarray:
+        """Per-shard selected counts (no mask materialization needed)."""
+        if self._counts is not None:
+            return self._counts.copy()
+        return np.asarray([int(m.sum()) for m in self.masks], np.int64)
 
     @property
     def total_selected(self) -> int:
-        # Labeled positives are already folded into the masks by run().
+        if self._counts is not None:
+            return int(self._counts.sum())
         return int(sum(int(m.sum()) for m in self.masks))
+
+    def indices(self, shard_id: int) -> np.ndarray:
+        """Sorted shard-local selected indices for one shard."""
+        if self._masks is not None:
+            return np.nonzero(self._masks[shard_id])[0].astype(np.int64)
+        return np.asarray(self.sink.indices(shard_id), np.int64)
+
+    @property
+    def masks(self) -> List[np.ndarray]:
+        """Per-shard boolean masks, materialized lazily from the sink.
+
+        Allocates O(corpus) booleans — for large stores prefer
+        `shard_counts` / `indices` / the sink itself.
+        """
+        if self._masks is None:
+            self._masks = [self.sink.mask(i)
+                           for i in range(self.num_shards)]
+        return self._masks
 
 
 @dataclasses.dataclass
@@ -82,7 +170,9 @@ class SelectionEngine:
                  use_kernel: Optional[bool] = None,
                  weight_schemes: Sequence[str] = ("sqrt",),
                  kappa: float = sampling.DEFENSIVE_KAPPA,
-                 cache_flat: Optional[bool] = None):
+                 cache_flat: Optional[bool] = None,
+                 select_backend: Optional[str] = None,
+                 chunk_records: Optional[int] = None):
         # ScoreStore (or anything exposing `.scores`) passes its memmap
         # through untouched; ndarray shards are viewed, not copied.
         raw_shards = [getattr(s, "scores", s) for s in shards]
@@ -100,14 +190,23 @@ class SelectionEngine:
         self.n_total = int(self.offsets[-1])
         self.num_bins = num_bins
         self.kappa = float(kappa)
+        # Streaming emission knobs: chunk_records bounds per-query peak
+        # memory; select_backend picks the threshold_select path (compiled
+        # Pallas on TPU, numpy reference elsewhere by default — interpret
+        # emulation stays available for kernel validation).
+        self.chunk_records = int(chunk_records or pipeline.CHUNK_RECORDS)
+        self.select_backend = (select_ops.default_backend()
+                               if select_backend is None else select_backend)
         self._flat = (np.concatenate(
             [np.asarray(s, np.float32) for s in self.shards])
             if cache_flat and self.shards else None)
 
         # 1. per-shard sketches (kernel path by default) + global merge.
+        #    Shards beyond chunk_records are sketched chunk-by-chunk and
+        #    merged (sketches are additive), so construction over memmap
+        #    shards never materializes a full shard either.
         self.shard_sketches = [
-            binned.build_sketch(jnp.asarray(s, jnp.float32), num_bins,
-                                use_kernel=use_kernel)
+            self._build_shard_sketch(s, num_bins, use_kernel)
             for s in self.shards]
         self.sketch = binned.merge_sketches(*self.shard_sketches)
 
@@ -133,6 +232,19 @@ class SelectionEngine:
             self._sampling_state(scheme, self.kappa)
 
     # -- cached state ---------------------------------------------------
+
+    def _build_shard_sketch(self, scores, num_bins, use_kernel):
+        n = int(scores.shape[0])
+        if n <= self.chunk_records:
+            return binned.build_sketch(jnp.asarray(scores, jnp.float32),
+                                       num_bins, use_kernel=use_kernel)
+        parts = [
+            binned.build_sketch(
+                jnp.asarray(np.asarray(scores[o:o + self.chunk_records],
+                                       np.float32)),
+                num_bins, use_kernel=use_kernel)
+            for o in range(0, n, self.chunk_records)]
+        return binned.merge_sketches(*parts)
 
     def _sampling_state(self, scheme: str,
                         kappa: float) -> List[_ShardSamplingState]:
@@ -221,8 +333,15 @@ class SelectionEngine:
 
     # -- query ----------------------------------------------------------
 
-    def run(self, key, oracle_fn: Callable, query: SUPGQuery) \
-            -> ShardedSelection:
+    def run(self, key, oracle_fn: Callable, query: SUPGQuery, *,
+            sink: Optional[pipeline.SelectionSink] = None,
+            chunk_records: Optional[int] = None) -> ShardedSelection:
+        """Execute one RT/PT query, streaming the selection through `sink`.
+
+        With no sink the selection lands in an in-memory `IndexSink`
+        (O(selected) host memory); pass a `BitmaskStore` for out-of-core
+        output or a `CallbackSink` to consume chunks as they are emitted.
+        """
         key = jax.random.PRNGKey(0) if key is None else key
         oracle = BudgetedOracle(oracle_fn, query.budget)
         s = query.budget
@@ -269,71 +388,123 @@ class SelectionEngine:
                         min_step=query.min_step)
             tau = float(res.tau)
 
-        masks = [np.asarray(s_arr >= tau) for s_arr in self.shards]
         pos = oracle.labeled_positives()
-        self._fold_positives(masks, pos)
-        return ShardedSelection(masks=masks, tau=tau,
-                                oracle_calls=oracle.calls_used,
-                                sampled_positive_global=pos)
+        return self._emit_selection(tau, pos, oracle.calls_used, sink,
+                                    chunk_records)
 
-    def run_joint(self, key, oracle_fn: Callable,
-                  query: JointSUPGQuery) -> ShardedSelection:
+    def run_joint(self, key, oracle_fn: Callable, query: JointSUPGQuery, *,
+                  sink: Optional[pipeline.SelectionSink] = None,
+                  chunk_records: Optional[int] = None) -> ShardedSelection:
         """Engine-level JT query (Appendix A): RT stage at gamma_recall,
-        then exhaustive oracle filtering of the candidate set. The returned
-        masks hold only oracle-verified positives (precision exactly 1.0);
-        oracle usage beyond the RT stage is unbounded by design."""
+        then exhaustive oracle filtering of the candidate set. The RT stage
+        streams into an internal IndexSink; verification then re-walks the
+        candidate indices in chunks, emitting only oracle-verified positives
+        into `sink` (precision exactly 1.0; oracle usage beyond the RT
+        stage is unbounded by design)."""
         rt = SUPGQuery(target="recall", gamma=query.gamma_recall,
                        delta=query.delta, budget=query.stage_budget,
                        method=query.method)
-        sel = self.run(key, oracle_fn, rt)
+        cand = self.run(key, oracle_fn, rt, chunk_records=chunk_records)
         oracle = BudgetedOracle(oracle_fn, budget=self.n_total)
-        masks = []
-        for sh, m in enumerate(sel.masks):
-            local = np.nonzero(m)[0]
-            keep = np.zeros_like(m)
-            if local.size:
-                labels = oracle(self.offsets[sh] + local)
-                keep[local] = labels > 0.5
-            masks.append(keep)
+        out = pipeline.IndexSink() if sink is None else sink
+        chunk = int(chunk_records or self.chunk_records)
+        sizes = [int(s.shape[0]) for s in self.shards]
+        out.open(sizes)
+        for sh in range(len(self.shards)):
+            local = cand.indices(sh)
+            for start in range(0, local.size, chunk):
+                seg = local[start:start + chunk]
+                labels = oracle(self.offsets[sh] + seg)
+                out.emit(sh, seg[labels > 0.5])
+        counts = out.close()
         return ShardedSelection(
-            masks=masks, tau=sel.tau,
-            oracle_calls=sel.oracle_calls + oracle.calls_used,
-            sampled_positive_global=sel.sampled_positive_global)
+            tau=cand.tau,
+            oracle_calls=cand.oracle_calls + oracle.calls_used,
+            sampled_positive_global=cand.sampled_positive_global,
+            sink=out, shard_sizes=sizes, counts=counts)
 
     def run_many(self, key, oracle_fn: Callable,
-                 queries: Sequence[Union[SUPGQuery, JointSUPGQuery]]) \
+                 queries: Sequence[Union[SUPGQuery, JointSUPGQuery]], *,
+                 sinks: Optional[Sequence[
+                     Optional[pipeline.SelectionSink]]] = None,
+                 chunk_records: Optional[int] = None) \
             -> List[ShardedSelection]:
         """Serve a batch of RT / PT / JT queries off one cached state.
 
         The sketch, shard masses, and per-scheme CDFs were built once at
-        construction; each query only pays O(s) sampling + O(n) mask
-        emission. Budgets are accounted per query (each gets its own
-        BudgetedOracle), matching independent `run` calls semantically.
+        construction; each query only pays O(s) sampling + one streamed
+        O(n) emission pass. Budgets are accounted per query (each gets its
+        own BudgetedOracle), matching independent `run` calls semantically.
+        `sinks`, when given, supplies one sink per query (None entries fall
+        back to a fresh IndexSink) — the streaming fan-out point for a
+        service.
         """
         keys = jax.random.split(
             jax.random.PRNGKey(0) if key is None else key, len(queries))
+        if sinks is None:
+            sinks = [None] * len(queries)
+        if len(sinks) != len(queries):
+            raise ValueError("need exactly one sink (or None) per query")
         out = []
-        for k, q in zip(keys, queries):
+        for k, q, snk in zip(keys, queries, sinks):
             if isinstance(q, JointSUPGQuery):
-                out.append(self.run_joint(k, oracle_fn, q))
+                out.append(self.run_joint(k, oracle_fn, q, sink=snk,
+                                          chunk_records=chunk_records))
             else:
-                out.append(self.run(k, oracle_fn, q))
+                out.append(self.run(k, oracle_fn, q, sink=snk,
+                                    chunk_records=chunk_records))
         return out
 
-    # -- helpers --------------------------------------------------------
+    # -- streaming emission ---------------------------------------------
 
-    def _fold_positives(self, masks: List[np.ndarray], pos: np.ndarray):
-        """Fold labeled positives into their shard masks (Algorithm 1's R1)
-        via one vectorized searchsorted route + per-shard scatter."""
-        if pos.size == 0:
-            return
-        sh = np.searchsorted(self.offsets, pos, side="right") - 1
-        local = pos - self.offsets[sh]
-        for shard_id in np.unique(sh):
-            masks[shard_id][local[sh == shard_id]] = True
+    def _emit_selection(self, tau: float, pos: np.ndarray,
+                        oracle_calls: int,
+                        sink: Optional[pipeline.SelectionSink],
+                        chunk_records: Optional[int]) -> ShardedSelection:
+        """Stream {A >= tau} ∪ labeled-positives through a sink.
+
+        Shards are walked independently in fixed-size chunks through the
+        fused threshold_select pass, so peak host memory is O(chunk) and
+        per-shard counts accumulate in the sink — no full-corpus boolean
+        mask is ever allocated. Labeled positives are folded as a sink-level
+        merge of the positives *below* tau (those at/above tau stream out
+        of their own chunks), keeping fold/emit disjoint and counts exact.
+        Unscored records (the -1 sentinel) are never emitted by the
+        threshold pass; an unscored labeled positive still folds in, exactly
+        like the materialized path selected it.
+        """
+        sink = pipeline.IndexSink() if sink is None else sink
+        chunk = int(chunk_records or self.chunk_records)
+        sizes = [int(s.shape[0]) for s in self.shards]
+        sink.open(sizes)
+        if pos.size:
+            below = pos[self.score_at(pos) < tau]
+            if below.size:
+                sh_ids = np.searchsorted(self.offsets, below,
+                                         side="right") - 1
+                for shard_id in np.unique(sh_ids):
+                    loc = below[sh_ids == shard_id] - self.offsets[shard_id]
+                    sink.fold(int(shard_id), np.unique(loc))
+        for sh, scores in enumerate(self.shards):
+            for start in range(0, int(scores.shape[0]), chunk):
+                block = scores[start:start + chunk]
+                local = select_ops.threshold_select(
+                    block, tau, backend=self.select_backend)
+                if local.size:
+                    sink.emit(sh, start + local)
+        counts = sink.close()
+        return ShardedSelection(tau=float(tau), oracle_calls=oracle_calls,
+                                sampled_positive_global=pos, sink=sink,
+                                shard_sizes=sizes, counts=counts)
 
     def _uniform_in_region(self, key, s, tau):
-        """Uniform draws from {A >= tau} across shards.
+        """Uniform draws from {A >= tau} across shards, chunk-streamed.
+
+        Region sizes come from one chunked counting pass and draws are
+        rank-routed back through per-chunk threshold_select, so the PT
+        stage-2 restriction runs at O(chunk) peak memory like selection
+        emission — no full-shard mask or nonzero is ever materialized
+        (unscored sentinel records are excluded, like emission).
 
         Shards whose region is empty get exactly zero categorical mass (no
         floor), so draws can never be clamped onto records below tau. If the
@@ -342,8 +513,16 @@ class SelectionEngine:
         which keeps the estimator valid (D' restriction is an efficiency
         device, never a correctness requirement).
         """
-        counts = np.asarray([int((np.asarray(sh) >= tau).sum())
-                             for sh in self.shards], np.float64)
+        chunk = self.chunk_records
+        per_shard = []           # per-shard arrays of per-chunk region sizes
+        for scores in self.shards:
+            n = int(scores.shape[0])
+            cc = [0] if n == 0 else []
+            for o in range(0, n, chunk):
+                c = np.asarray(scores[o:o + chunk], np.float32)
+                cc.append(int(np.count_nonzero((c >= tau) & (c >= 0.0))))
+            per_shard.append(np.asarray(cc, np.int64))
+        counts = np.asarray([cc.sum() for cc in per_shard], np.float64)
         total = counts.sum()
         if total == 0:
             idx = jax.random.randint(key, (s,), 0, self.n_total)
@@ -359,8 +538,16 @@ class SelectionEngine:
             take = np.nonzero(alloc == sh)[0]
             if take.size == 0:
                 continue
-            region = np.nonzero(np.asarray(scores) >= tau)[0]
-            pick = np.asarray(jax.random.randint(
-                dkeys[sh], (take.size,), 0, region.size))
-            out[take] = self.offsets[sh] + region[pick]
+            cum = np.concatenate([[0], np.cumsum(per_shard[sh])])
+            # uniform region ranks, then rank -> (chunk, offset-in-chunk)
+            r = np.asarray(jax.random.randint(
+                dkeys[sh], (take.size,), 0, int(cum[-1])), np.int64)
+            ch = np.searchsorted(cum, r, side="right") - 1
+            for c_id in np.unique(ch):
+                in_chunk = ch == c_id
+                region = select_ops.threshold_select(
+                    scores[c_id * chunk:(c_id + 1) * chunk], tau,
+                    backend=self.select_backend)
+                out[take[in_chunk]] = (self.offsets[sh] + c_id * chunk
+                                       + region[r[in_chunk] - cum[c_id]])
         return out

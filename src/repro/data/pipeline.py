@@ -9,15 +9,25 @@ Production posture:
   * a background prefetch thread keeps `depth` batches ready so host-side
     generation overlaps device compute (the standard single-host overlap);
   * record stores for the selection plane are memory-mapped score arrays
-    (np.memmap) so a 1e9-score corpus never fully materializes in RAM.
+    (np.memmap) so a 1e9-score corpus never fully materializes in RAM;
+  * selection *output* is streamed, not materialized: the engine emits
+    selected record indices shard-by-shard in fixed-size chunks into a
+    `SelectionSink` (in-memory `IndexSink`, memmap-packed `BitmaskStore`,
+    or `CallbackSink`/`SelectionStream` for service streaming), so a query
+    over 1e8+ records never allocates a full-corpus boolean mask.
 """
 from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, Iterator, Optional
+from typing import Callable, Iterator, List, Optional, Sequence
 
 import numpy as np
+
+# Default streaming granularity: 4M records (16 MB of float32 scores per
+# chunk) — big enough to amortize per-chunk overheads, small enough that
+# per-query peak host memory stays O(chunk), not O(corpus).
+CHUNK_RECORDS = 1 << 22
 
 
 class DeterministicSource:
@@ -92,10 +102,20 @@ class ScoreStore:
         else:
             self._arr = np.memmap(self.path, np.float32, mode,
                                   shape=(num_records,))
+        self._num_scored: Optional[int] = None
 
     def write(self, start: int, scores: np.ndarray):
+        scores = np.asarray(scores)
+        n = int(self._arr.shape[0])
+        # Reject out-of-range writes outright — memmap slicing would
+        # silently truncate them and scoring jobs would lose records.
+        if start < 0 or start + scores.shape[0] > n:
+            raise ValueError(
+                f"write [{start}, {start + scores.shape[0]}) out of range "
+                f"for store of {n} records")
         self._arr[start:start + scores.shape[0]] = scores
         self._arr.flush()
+        self._num_scored = None   # invalidate the cached scan
 
     def read(self, start: int = 0, count: Optional[int] = None) -> np.ndarray:
         end = None if count is None else start + count
@@ -112,4 +132,268 @@ class ScoreStore:
 
     @property
     def num_scored(self) -> int:
-        return int((self._arr >= 0).sum())
+        """Count of scored (non-sentinel) records, cached between writes.
+
+        The scan itself is chunked so even a 1e9-record store is counted
+        with O(chunk) peak memory; repeat reads are O(1) until the next
+        `write` invalidates the cache.
+        """
+        if self._num_scored is None:
+            total = 0
+            for off in range(0, int(self._arr.shape[0]), CHUNK_RECORDS):
+                total += int(
+                    (self._arr[off:off + CHUNK_RECORDS] >= 0).sum())
+            self._num_scored = total
+        return self._num_scored
+
+
+# ---------------------------------------------------------------------------
+# Selection sinks — the streaming output plane
+# ---------------------------------------------------------------------------
+
+class SelectionSink:
+    """Chunked consumer protocol for streamed selection emission.
+
+    The engine calls, in order:
+
+        open(shard_sizes)              once, before any emission
+        fold(shard_id, local_idx)      labeled positives *below* tau
+                                       (Algorithm 1's R1, sink-level merge)
+        emit(shard_id, local_idx)      ascending in-chunk, chunks in order
+                                       per shard; disjoint from fold()
+        close() -> per-shard counts    once, after the last chunk
+
+    emit/fold receive *shard-local* indices; `offsets` maps them to global
+    ids. Because the engine guarantees fold/emit disjointness, the base
+    class's per-shard counts are exact without any dedup state.
+    """
+
+    def open(self, shard_sizes: Sequence[int]) -> None:
+        self.shard_sizes = [int(n) for n in shard_sizes]
+        self.offsets = np.concatenate(
+            [[0], np.cumsum(self.shard_sizes)]).astype(np.int64)
+        self.counts = np.zeros(len(self.shard_sizes), np.int64)
+
+    def emit(self, shard_id: int, local_idx: np.ndarray) -> None:
+        local_idx = np.asarray(local_idx, np.int64)
+        if local_idx.size == 0:
+            return
+        self.counts[shard_id] += local_idx.size
+        self._consume(shard_id, local_idx, folded=False)
+
+    def fold(self, shard_id: int, local_idx: np.ndarray) -> None:
+        local_idx = np.asarray(local_idx, np.int64)
+        if local_idx.size == 0:
+            return
+        self.counts[shard_id] += local_idx.size
+        self._consume(shard_id, local_idx, folded=True)
+
+    def close(self) -> np.ndarray:
+        self._finalize()
+        return self.counts.copy()
+
+    @property
+    def total_selected(self) -> int:
+        return int(self.counts.sum())
+
+    # -- subclass hooks -------------------------------------------------
+
+    def _consume(self, shard_id: int, local_idx: np.ndarray,
+                 folded: bool) -> None:
+        raise NotImplementedError
+
+    def _finalize(self) -> None:
+        pass
+
+    # -- optional views (materializing sinks only) ----------------------
+
+    def indices(self, shard_id: int) -> np.ndarray:
+        """Sorted shard-local selected indices."""
+        raise NotImplementedError(f"{type(self).__name__} holds no state")
+
+    def mask(self, shard_id: int) -> np.ndarray:
+        """Boolean selection mask for one shard (materializes that shard)."""
+        m = np.zeros(self.shard_sizes[shard_id], bool)
+        m[self.indices(shard_id)] = True
+        return m
+
+
+class IndexSink(SelectionSink):
+    """In-memory per-shard index sink — the default materializer.
+
+    Holds O(selected) int64 indices instead of O(corpus) booleans; `mask`
+    rematerializes a single shard's boolean view on demand.
+    """
+
+    def open(self, shard_sizes):
+        super().open(shard_sizes)
+        self._chunks: List[List[np.ndarray]] = [[] for _ in self.shard_sizes]
+        self._idx: Optional[List[np.ndarray]] = None
+
+    def _consume(self, shard_id, local_idx, folded):
+        self._chunks[shard_id].append(local_idx)
+
+    def _finalize(self):
+        # Emission is ascending per shard but fold() chunks interleave
+        # arbitrarily; one sort per shard restores canonical order.
+        self._idx = [
+            np.sort(np.concatenate(c)) if c else np.empty(0, np.int64)
+            for c in self._chunks]
+        self._chunks = [[] for _ in self.shard_sizes]
+
+    def indices(self, shard_id):
+        if self._idx is None:
+            raise RuntimeError("sink not closed yet")
+        return self._idx[shard_id]
+
+
+class BitmaskStore(SelectionSink):
+    """Memmap-backed packed selection bitmask: 1 bit per record on disk.
+
+    The out-of-core materializer — a 1e9-record selection costs 125 MB of
+    disk and O(chunk) host memory while being written. Bits are byte-aligned
+    per shard so shards stay independently addressable.
+    """
+
+    def __init__(self, path):
+        self.path = str(path)
+        self._arr: Optional[np.memmap] = None
+
+    def open(self, shard_sizes):
+        super().open(shard_sizes)
+        self._byte_offsets = np.concatenate(
+            [[0], np.cumsum([(n + 7) // 8 for n in self.shard_sizes])]
+        ).astype(np.int64)
+        total = max(int(self._byte_offsets[-1]), 1)
+        self._arr = np.memmap(self.path, np.uint8, "w+", shape=(total,))
+
+    def _consume(self, shard_id, local_idx, folded):
+        base = int(self._byte_offsets[shard_id])
+        np.bitwise_or.at(self._arr, base + (local_idx >> 3),
+                         (1 << (local_idx & 7)).astype(np.uint8))
+
+    def _finalize(self):
+        self._arr.flush()
+
+    def mask(self, shard_id):
+        base = int(self._byte_offsets[shard_id])
+        nbytes = int(self._byte_offsets[shard_id + 1]) - base
+        bits = np.unpackbits(np.asarray(self._arr[base:base + nbytes]),
+                             bitorder="little")
+        return bits[:self.shard_sizes[shard_id]].astype(bool)
+
+    def indices(self, shard_id, chunk_bytes: int = 1 << 20):
+        """Sorted shard-local indices, decoded in bounded byte chunks."""
+        base = int(self._byte_offsets[shard_id])
+        nbytes = int(self._byte_offsets[shard_id + 1]) - base
+        out = []
+        for off in range(0, nbytes, chunk_bytes):
+            span = np.asarray(self._arr[base + off:
+                                        base + min(off + chunk_bytes,
+                                                   nbytes)])
+            bits = np.unpackbits(span, bitorder="little")
+            hit = np.nonzero(bits)[0].astype(np.int64) + off * 8
+            if hit.size:
+                out.append(hit)
+        if not out:
+            return np.empty(0, np.int64)
+        idx = np.concatenate(out)
+        return idx[idx < self.shard_sizes[shard_id]]
+
+
+class CallbackSink(SelectionSink):
+    """Streams (shard_id, global_ids, folded) chunks to a callback as the
+    engine emits them — the service-streaming sink. Holds no index state;
+    only the per-shard counts survive close()."""
+
+    def __init__(self, fn: Callable[[int, np.ndarray, bool], None]):
+        self._fn = fn
+
+    def _consume(self, shard_id, local_idx, folded):
+        self._fn(shard_id, self.offsets[shard_id] + local_idx, folded)
+
+
+class _StreamCancelled(Exception):
+    """Raised inside the producer when the consumer closed the stream."""
+
+
+class SelectionStream:
+    """Iterator inversion of `CallbackSink`: consume a streamed selection
+    as `(shard_id, global_ids, folded)` chunks while the engine produces
+    them from a background thread.
+
+        with SelectionStream(
+                lambda sink: engine.run(key, oracle, q, sink=sink)) as st:
+            for shard_id, gids, folded in st:
+                ...                    # incremental consumption
+        result = st.result             # ShardedSelection after exhaustion
+
+    The queue is depth-bounded, so a slow consumer backpressures the
+    emission loop instead of buffering the whole selection. A consumer
+    that stops early must call `close()` (the context manager does) —
+    it cancels the producer at its next chunk and reaps the thread;
+    `result` stays None for a cancelled stream.
+    """
+
+    _SENTINEL = object()
+
+    def __init__(self, run_fn: Callable[[SelectionSink], object],
+                 depth: int = 8):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._err: Optional[BaseException] = None
+        self._closed = False
+        self._done = False
+        self.result = None
+
+        def on_chunk(sh, gids, folded):
+            if self._closed:
+                raise _StreamCancelled
+            self._q.put((sh, gids, folded))
+
+        def produce():
+            try:
+                self.result = run_fn(CallbackSink(on_chunk))
+            except _StreamCancelled:
+                pass
+            except BaseException as e:  # noqa: BLE001 — surfaced on get
+                self._err = e
+            finally:
+                self._q.put(self._SENTINEL)
+
+        self._thread = threading.Thread(target=produce, daemon=True)
+        self._thread.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._done:
+            raise StopIteration
+        item = self._q.get()
+        if item is self._SENTINEL:
+            self._done = True
+            self._thread.join()
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+    def close(self):
+        """Abandon the stream: cancel the producer at its next chunk and
+        drain the queue so a blocked put() can finish. Safe to call at any
+        point, including after exhaustion."""
+        if self._done:
+            return
+        self._closed = True
+        while True:
+            if self._q.get() is self._SENTINEL:
+                break
+        self._thread.join()
+        self._done = True
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

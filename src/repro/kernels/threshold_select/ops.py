@@ -1,0 +1,64 @@
+"""Public wrapper for the fused threshold-selection kernel.
+
+`backend="auto"` compiles the Pallas kernel on TPU and routes to the
+pure-numpy nonzero reference elsewhere — the reference IS the CPU
+production path (interpret-mode emulation of the one-hot compaction is for
+kernel validation, not throughput, so unlike score_hist it is opt-in via
+`backend="interpret"`). `backend="ref"` forces the numpy path, which is
+also the automatic fallback whenever `block_n` is not tile-aligned. All
+backends return identical ascending int64 indices, so the streaming plane
+is backend-agnostic bit-for-bit.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.kernels.threshold_select import ref
+from repro.kernels.threshold_select.threshold_select import _SLOT_TILE
+from repro.kernels.threshold_select.threshold_select import (
+    threshold_select_blocks as _kernel)
+
+
+def kernel_supported(block_n: int) -> bool:
+    """Whether the fused kernel's slot-tile layout covers this block size."""
+    return block_n % _SLOT_TILE == 0
+
+
+def default_backend() -> str:
+    """The engine's platform default: compiled kernel on TPU, numpy
+    reference elsewhere (interpret emulation is for kernel validation, not
+    CPU throughput)."""
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def threshold_select(scores, tau, *, block_n: int = 1024,
+                     backend: str = "auto") -> np.ndarray:
+    """Ascending local indices of {i : scores[i] >= tau, scores[i] >= 0}.
+
+    scores may be any host float array (np.memmap chunks included); entries
+    below 0 are the "unscored" sentinel and are never selected. The kernel
+    path stitches per-block compacted indices with per-block counts on the
+    host — peak memory is O(len(scores)), so callers bound memory by
+    chunking the corpus, never by masking it whole.
+    """
+    n = int(np.asarray(scores).shape[0])
+    if n == 0:
+        return np.empty(0, np.int64)
+    if backend == "auto":
+        backend = default_backend()
+    if backend != "ref" and not kernel_supported(block_n):
+        backend = "ref"
+    if backend == "ref":
+        return ref.threshold_select_ref(scores, tau)
+
+    idx, cnt = _kernel(np.asarray(scores, np.float32), float(tau),
+                       block_n=block_n, interpret=(backend == "interpret"))
+    idx = np.asarray(idx)
+    cnt = np.asarray(cnt)[:, 0].astype(np.int64)
+    nb = idx.shape[0]
+    lane = np.arange(block_n, dtype=np.int64)
+    keep = lane[None, :] < cnt[:, None]
+    base = (np.arange(nb, dtype=np.int64) * block_n)[:, None]
+    out = (idx.astype(np.int64) + base)[keep]   # row-major => ascending
+    return out

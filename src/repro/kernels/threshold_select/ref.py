@@ -1,0 +1,20 @@
+"""Pure-numpy oracle for the fused threshold select (nonzero formulation).
+
+Also the production CPU-throughput path: a chunk-local nonzero is exactly
+what the fused kernel computes, and numpy's nonzero streams the chunk once
+with no per-record Python work. Operates on host arrays (memmap chunks
+included) without copying them to a device buffer.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def threshold_select_ref(scores, tau) -> np.ndarray:
+    """Ascending local indices of {i : scores[i] >= tau and scores[i] >= 0}.
+
+    Entries below 0 are the "unscored" sentinel (-1) and are never selected,
+    matching the kernel's validity mask bit-for-bit.
+    """
+    s = np.asarray(scores)
+    return np.nonzero((s >= tau) & (s >= 0.0))[0].astype(np.int64)

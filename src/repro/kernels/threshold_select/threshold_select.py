@@ -1,0 +1,95 @@
+"""Fused threshold-selection kernel — the streaming emission hot loop.
+
+Selection emission is the last O(n) pass of a SUPG query: once tau is
+estimated from the tiny labeled sample, every shard must be scanned for
+{x : A(x) >= tau}. Materializing a boolean mask per query costs one full
+host-side allocation per corpus; at 1e9 records that is the memory wall the
+streaming plane removes. This kernel fuses, per (1, block_n) score block:
+
+    compare:  sel[i] = (A(x_i) >= tau) & (A(x_i) >= 0)   (-1 marks unscored
+              records / padding — they are never emitted, regardless of tau)
+    count:    cnt    = sum(sel)
+    compact:  idx[j] = i of the j-th selected record, j < cnt (block-local)
+
+so one streaming read of the chunk yields dense per-block index lists whose
+total size is O(selected), not O(n). Compaction is resolved the same way
+score_hist resolves bin membership: the slot assignment pos = cumsum(sel)-1
+drives one-hot (block_n x 512) masks contracted against the block-local
+iota on the MXU (float32 is exact for indices < 2^24 >> block_n). Entries
+at slots >= cnt are matmul zeros; callers slice by cnt.
+
+Layout: grid (n_blocks,); tau rides in SMEM; outputs are (nb, block_n)
+compacted indices + (nb, 128) lane-broadcast counts. Compiled on TPU,
+`interpret=True` emulation elsewhere; the pure-numpy reference in ref.py is
+the non-tile-aligned / CPU-throughput fallback.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_SLOT_TILE = 512
+
+
+def _select_kernel(tau_ref, s_ref, idx_ref, cnt_ref, *, block_n):
+    tau = tau_ref[0]
+    s = s_ref[0].astype(jnp.float32)                  # (block_n,)
+    valid = s >= 0.0                                  # sentinel/padding = -1
+    sel = jnp.logical_and(valid, s >= tau)
+    self32 = sel.astype(jnp.float32)
+    pos = jnp.cumsum(self32) - 1.0                    # slot of each selected
+    local = jax.lax.broadcasted_iota(jnp.float32, (1, block_n), 1)
+
+    for t in range(block_n // _SLOT_TILE):
+        lo = t * _SLOT_TILE
+        slot_ids = lo + jax.lax.broadcasted_iota(
+            jnp.float32, (block_n, _SLOT_TILE), 1)
+        onehot = jnp.where(sel[:, None], (pos[:, None] == slot_ids)
+                           .astype(jnp.float32), 0.0)
+        compact = jax.lax.dot_general(
+            local, onehot, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)       # (1, _SLOT_TILE)
+        idx_ref[0, lo:lo + _SLOT_TILE] = compact[0]
+    cnt_ref[0, :] = jnp.full((128,), jnp.sum(self32), jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def threshold_select_blocks(scores, tau, block_n=1024, interpret=False):
+    """scores: (N,) float; entries < 0 (unscored sentinel/padding) are never
+    selected. Returns (idx, cnt): idx (nb, block_n) float32 block-local
+    compacted indices (garbage beyond the count), cnt (nb, 128) float32
+    per-block selected counts broadcast across lanes.
+    """
+    assert block_n % _SLOT_TILE == 0
+    n = scores.shape[0]
+    pad = (-n) % block_n
+    if pad:
+        scores = jnp.concatenate(
+            [scores, jnp.full((pad,), -1.0, scores.dtype)])
+    nb = scores.shape[0] // block_n
+    blocks = scores.reshape(nb, block_n)
+    tau_arr = jnp.full((1,), tau, jnp.float32)
+
+    kernel = functools.partial(_select_kernel, block_n=block_n)
+    idx, cnt = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, block_n), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 128), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, block_n), jnp.float32),
+            jax.ShapeDtypeStruct((nb, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tau_arr, blocks)
+    return idx, cnt

@@ -18,6 +18,26 @@ def test_sketch_totals():
         float(np.sqrt(s).sum()), rel=1e-4)
 
 
+def test_sketch_sentinel_parity_across_backends():
+    """The -1 "unscored" sentinel must be masked identically by the kernel
+    and jnp fallback paths (the fallback used to clip it into bin 0), so
+    partially-scored ScoreStore shards agree across backends."""
+    rng = np.random.default_rng(7)
+    s = rng.beta(0.3, 1.5, 8_192).astype(np.float32)
+    s[rng.integers(0, s.shape[0], 2_000)] = -1.0
+    n_valid = int((s >= 0).sum())
+    sk_k = binned.build_sketch(jnp.asarray(s), 512, use_kernel=True)
+    sk_j = binned.build_sketch(jnp.asarray(s), 512, use_kernel=False)
+    for a, b in zip(sk_k, sk_j):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+    assert float(sk_j.total) == n_valid
+    # normalizers agree too — the engine's cached sampling state depends
+    # on them, never on re-reducing raw shards
+    np.testing.assert_allclose(
+        np.asarray(binned.weight_normalizers(sk_k)),
+        np.asarray(binned.weight_normalizers(sk_j)), rtol=1e-5)
+
+
 def test_rank_to_threshold_conservative():
     rng = np.random.default_rng(1)
     s = rng.random(50_000).astype(np.float32)

@@ -1,9 +1,12 @@
-"""Data pipeline: determinism, sharding, resume, marker oracle."""
+"""Data pipeline: determinism, sharding, resume, marker oracle, and the
+streaming selection sinks."""
 import numpy as np
 import pytest
 
 from repro.data import synthetic
-from repro.data.pipeline import DeterministicSource, Prefetcher, ScoreStore
+from repro.data.pipeline import (BitmaskStore, CallbackSink,
+                                 DeterministicSource, IndexSink, Prefetcher,
+                                 ScoreStore, SelectionStream)
 
 
 def test_beta_dataset_properties():
@@ -72,6 +75,132 @@ def test_score_store_roundtrip(tmp_path):
     assert store.num_scored == 20
     got = store.read(10, 20)
     np.testing.assert_allclose(got, np.linspace(0, 1, 20), atol=1e-6)
+
+
+def test_score_store_num_scored_cached(tmp_path):
+    """Regression: num_scored used to rescan the whole store on every
+    access; it must be cached and invalidated by write()."""
+    store = ScoreStore(tmp_path / "s.f32", 64, create=True)
+    assert store.num_scored == 0
+    assert store._num_scored == 0              # cache populated
+    store.write(0, np.full(8, 0.5, np.float32))
+    assert store._num_scored is None           # invalidated
+    assert store.num_scored == 8
+    # cached value survives repeated reads without a rescan
+    store._arr[16] = 0.9                       # out-of-band mutation
+    assert store.num_scored == 8               # stale by design until write
+    store.write(32, np.full(1, 0.1, np.float32))
+    assert store.num_scored == 10
+
+
+def test_score_store_write_rejects_out_of_range(tmp_path):
+    """Regression: memmap slicing used to silently truncate out-of-range
+    writes; they must be rejected outright."""
+    store = ScoreStore(tmp_path / "s.f32", 10, create=True)
+    with pytest.raises(ValueError):
+        store.write(8, np.ones(5, np.float32))
+    with pytest.raises(ValueError):
+        store.write(-1, np.ones(2, np.float32))
+    assert store.num_scored == 0               # nothing landed
+    store.write(5, np.ones(5, np.float32))     # exact-fit tail is fine
+    assert store.num_scored == 5
+
+
+# -- selection sinks ---------------------------------------------------------
+
+_SIZES = [100, 0, 37]
+
+
+def _fill(sink):
+    sink.open(_SIZES)
+    sink.fold(0, np.asarray([5, 99]))
+    sink.emit(0, np.arange(10, 20))
+    sink.emit(2, np.asarray([0, 36]))
+    return sink.close()
+
+
+def test_index_sink_counts_and_views():
+    sink = IndexSink()
+    counts = _fill(sink)
+    np.testing.assert_array_equal(counts, [12, 0, 2])
+    assert sink.total_selected == 14
+    np.testing.assert_array_equal(
+        sink.indices(0), np.sort(np.r_[5, 99, np.arange(10, 20)]))
+    assert sink.indices(1).size == 0
+    mask = sink.mask(2)
+    assert mask.shape == (37,) and mask[0] and mask[36] and mask.sum() == 2
+
+
+def test_bitmask_store_matches_index_sink(tmp_path):
+    """BitmaskStore must agree with IndexSink bit-for-bit and keep its
+    packed representation on disk (~n/8 bytes)."""
+    idx, bits = IndexSink(), BitmaskStore(tmp_path / "sel.bits")
+    _fill(idx)
+    counts = _fill(bits)
+    np.testing.assert_array_equal(counts, [12, 0, 2])
+    for sh in range(3):
+        np.testing.assert_array_equal(bits.indices(sh), idx.indices(sh))
+        np.testing.assert_array_equal(bits.mask(sh), idx.mask(sh))
+    import os
+    assert os.path.getsize(tmp_path / "sel.bits") == (100 + 7) // 8 + 0 + \
+        (37 + 7) // 8
+
+
+def test_callback_sink_streams_global_ids():
+    got = []
+    sink = CallbackSink(lambda sh, gids, folded: got.append(
+        (sh, gids.tolist(), folded)))
+    counts = _fill(sink)
+    np.testing.assert_array_equal(counts, [12, 0, 2])
+    assert got[0] == (0, [5, 99], True)               # folded positives
+    assert got[1] == (0, list(range(10, 20)), False)
+    assert got[2] == (2, [100, 136], False)           # offset by 100 + 0
+    with pytest.raises(NotImplementedError):
+        sink.indices(0)
+
+
+def test_selection_stream_iterates_and_returns_result():
+    def run(sink):
+        _fill(sink)
+        return "payload"
+
+    stream = SelectionStream(run, depth=2)
+    chunks = list(stream)
+    assert [c[0] for c in chunks] == [0, 0, 2]
+    assert stream.result == "payload"
+
+
+def test_selection_stream_propagates_errors():
+    def run(sink):
+        sink.open(_SIZES)
+        sink.emit(0, np.asarray([1]))
+        raise RuntimeError("boom")
+
+    stream = SelectionStream(run, depth=2)
+    with pytest.raises(RuntimeError):
+        list(stream)
+    with pytest.raises(StopIteration):   # exhausted, not blocked
+        next(stream)
+
+
+def test_selection_stream_close_cancels_producer():
+    """A consumer that stops early must not leak a producer blocked on the
+    bounded queue: close() cancels the run at its next chunk and reaps the
+    thread (the context manager closes automatically)."""
+    def run(sink):
+        sink.open([1000])
+        for i in range(100):                      # >> queue depth
+            sink.emit(0, np.asarray([i]))
+        sink.close()
+        return "finished"
+
+    with SelectionStream(run, depth=2) as stream:
+        next(stream)                              # consume one chunk, bail
+    assert not stream._thread.is_alive()
+    assert stream.result is None                  # cancelled, not finished
+    with pytest.raises(StopIteration):
+        next(stream)
+    stream.close()                                # idempotent
 
 
 def test_lm_batches_resumable():

@@ -1,5 +1,6 @@
 """SelectionEngine data-plane tests: cached-state sampling, vectorized
-gathers, regression fixes, run_many batching, and equivalence against the
+gathers, regression fixes, run_many batching, streamed-vs-materialized
+equivalence, partially-scored stores, and equivalence against the
 single-host exact path."""
 import numpy as np
 import pytest
@@ -10,7 +11,8 @@ from repro.core import queries
 from repro.core.engine import SelectionEngine, ShardedSelection
 from repro.core.oracle import array_oracle
 from repro.core.queries import JointSUPGQuery, SUPGQuery
-from repro.data.pipeline import ScoreStore
+from repro.data.pipeline import (BitmaskStore, CallbackSink, IndexSink,
+                                 ScoreStore, SelectionStream)
 from repro.data.synthetic import make_beta
 
 
@@ -39,6 +41,28 @@ def test_uniform_in_region_excludes_empty_shards():
     assert np.all(engine.score_at(idx) >= 0.5)
 
 
+def test_uniform_in_region_chunked_rank_routing():
+    """The chunk-streamed region draw (O(chunk) memory) must stay uniform
+    over {A >= tau} when regions span many chunks, and never select the
+    unscored sentinel."""
+    rng = np.random.default_rng(5)
+    scores = rng.random(10_000).astype(np.float32)
+    scores[rng.integers(0, 10_000, 500)] = -1.0
+    engine = SelectionEngine(np.array_split(scores, 3), num_bins=512,
+                             chunk_records=256)    # many chunks per shard
+    idx = engine._uniform_in_region(jax.random.PRNGKey(4), 5000, 0.6)
+    got = engine.score_at(idx)
+    assert np.all(got >= 0.6)                      # region + sentinel safe
+    # roughly uniform across the region: compare shard allocation to the
+    # true per-shard region sizes
+    region_per_shard = np.asarray(
+        [((s >= 0.6) & (s >= 0)).sum() for s in engine.shards], np.float64)
+    shd = np.searchsorted(engine.offsets, idx, side="right") - 1
+    frac = np.bincount(shd, minlength=3) / 5000
+    np.testing.assert_allclose(
+        frac, region_per_shard / region_per_shard.sum(), atol=0.05)
+
+
 def test_uniform_in_region_globally_empty_falls_back_to_uniform():
     engine = SelectionEngine([np.zeros(100, np.float32),
                               np.zeros(50, np.float32)], num_bins=512)
@@ -62,13 +86,21 @@ def test_score_at_matches_elementwise_gather():
     np.testing.assert_array_equal(routed.score_at(gi), flat[gi])
 
 
-def test_fold_positives_vectorized():
+def test_fold_positives_sink_level():
+    """Labeled positives below tau are folded as a sink-level merge, routed
+    to their shards; positives at/above tau stream out of their own chunks
+    (fold/emit disjointness keeps per-shard counts exact)."""
     shards = [np.zeros(100, np.float32), np.zeros(50, np.float32)]
+    shards[1][49] = 0.9                       # above tau: emitted, not folded
     engine = SelectionEngine(shards, num_bins=512)
-    masks = [np.zeros(100, bool), np.zeros(50, bool)]
-    engine._fold_positives(masks, np.asarray([0, 99, 100, 149], np.int64))
+    pos = np.asarray([0, 99, 100, 149], np.int64)
+    sel = engine._emit_selection(0.5, pos, oracle_calls=0, sink=None,
+                                 chunk_records=64)
+    masks = sel.masks
     assert masks[0][0] and masks[0][99] and masks[1][0] and masks[1][49]
     assert masks[0].sum() == 2 and masks[1].sum() == 2
+    np.testing.assert_array_equal(sel.shard_counts, [2, 2])
+    assert sel.total_selected == 4
 
 
 # -- cached sampling state ---------------------------------------------------
@@ -155,6 +187,183 @@ def test_run_many_matches_independent_runs():
         assert solo.tau == b.tau
         np.testing.assert_array_equal(np.concatenate(solo.masks),
                                       np.concatenate(b.masks))
+
+
+# -- streamed emission: sink equivalence -------------------------------------
+
+def _materialized_baseline(engine, sel):
+    """The PR-1 behavior, computed directly: full boolean masks
+    {A >= tau} (never the unscored sentinel) with labeled positives folded
+    in. The streamed plane must reproduce this bit-for-bit."""
+    masks = []
+    for s in engine.shards:
+        s = np.asarray(s, np.float32)
+        masks.append((s >= sel.tau) & (s >= 0.0))
+    pos = sel.sampled_positive_global
+    if pos.size:
+        shd = np.searchsorted(engine.offsets, pos, side="right") - 1
+        for i in range(len(masks)):
+            masks[i][pos[shd == i] - engine.offsets[i]] = True
+    return masks
+
+
+@pytest.mark.parametrize("qspec", ["rt", "pt", "jt"])
+def test_streamed_selection_matches_materialized(tmp_path, qspec):
+    """Streamed emission through every sink type returns exactly the PR-1
+    materialized masks on RT, PT, and JT queries (same key => same tau and
+    sample => identical selections, bit-for-bit)."""
+    ds = make_beta(60_000, 0.02, 1.0, seed=40)
+    truth_split = np.array_split(ds.labels > 0.5, 3)
+    oracle = array_oracle(ds.labels)
+    engine = SelectionEngine(np.array_split(ds.scores, 3), num_bins=1024,
+                             chunk_records=7_000)   # force multiple chunks
+    q = {"rt": SUPGQuery(target="recall", gamma=0.9, budget=2000),
+         "pt": SUPGQuery(target="precision", gamma=0.8, budget=2000),
+         "jt": JointSUPGQuery(gamma_recall=0.85, stage_budget=2000)}[qspec]
+    key = jax.random.PRNGKey(7)
+
+    def run(sink=None):
+        if qspec == "jt":
+            return engine.run_joint(key, oracle, q, sink=sink)
+        return engine.run(key, oracle, q, sink=sink)
+
+    base = run()                      # default IndexSink
+    assert isinstance(base.sink, IndexSink)
+    expected = _materialized_baseline(engine, base)
+    if qspec == "jt":                 # verified positives only
+        expected = [m & t for m, t in zip(expected, truth_split)]
+    np.testing.assert_array_equal(np.concatenate(base.masks),
+                                  np.concatenate(expected))
+    np.testing.assert_array_equal(
+        base.shard_counts, [m.sum() for m in expected])
+
+    # memmap-packed bitmask sink
+    bits = BitmaskStore(tmp_path / f"{qspec}.bits")
+    sel_b = run(sink=bits)
+    assert sel_b.tau == base.tau
+    np.testing.assert_array_equal(np.concatenate(sel_b.masks),
+                                  np.concatenate(expected))
+
+    # callback sink: rebuild masks from the streamed chunks
+    got = [[] for _ in engine.shards]
+    sel_c = run(sink=CallbackSink(
+        lambda sh, gids, folded: got[sh].append(gids)))
+    rebuilt = []
+    for sh, chunks in enumerate(got):
+        m = np.zeros(engine.shards[sh].shape[0], bool)
+        if chunks:
+            m[np.concatenate(chunks) - engine.offsets[sh]] = True
+        rebuilt.append(m)
+    np.testing.assert_array_equal(np.concatenate(rebuilt),
+                                  np.concatenate(expected))
+    assert sel_c.total_selected == int(np.concatenate(expected).sum())
+
+
+def test_selection_stream_consumes_query_incrementally():
+    ds = make_beta(20_000, 0.02, 1.0, seed=41)
+    engine = SelectionEngine(np.array_split(ds.scores, 2), num_bins=512,
+                             chunk_records=2_000)
+    q = SUPGQuery(target="recall", gamma=0.9, budget=1000)
+    stream = SelectionStream(
+        lambda sink: engine.run(jax.random.PRNGKey(2),
+                                array_oracle(ds.labels), q, sink=sink))
+    seen = 0
+    for shard_id, gids, folded in stream:
+        assert np.all((gids >= engine.offsets[shard_id])
+                      & (gids < engine.offsets[shard_id + 1]))
+        seen += gids.size
+    assert stream.result.total_selected == seen > 0
+
+
+# -- partially-scored stores -------------------------------------------------
+
+def test_partially_scored_store_sketch_parity_and_selection(tmp_path):
+    """A store with unscored (-1) records must sketch identically on the
+    kernel and jnp paths (sentinel masked, not clipped into bin 0) and the
+    streamed selection must never emit unscored records."""
+    rng = np.random.default_rng(9)
+    n, scored = 40_000, 30_000
+    scores = rng.beta(0.5, 2.0, scored).astype(np.float32)
+    store = ScoreStore(tmp_path / "partial.scores", n, create=True)
+    store.write(0, scores)
+    assert store.num_scored == scored
+
+    ek = SelectionEngine([store], num_bins=512, use_kernel=True)
+    ej = SelectionEngine([store], num_bins=512, use_kernel=False)
+    for a, b in zip(ek.sketch, ej.sketch):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+    assert float(ej.sketch.total) == scored       # sentinel not in bin 0
+    assert float(ej.sketch.counts[0]) < scored
+
+    labels = np.zeros(n, np.float32)
+    labels[:scored] = (rng.random(scored) < scores).astype(np.float32)
+    q = SUPGQuery(target="recall", gamma=0.85, budget=2000)
+    sel = ej.run(jax.random.PRNGKey(3), array_oracle(labels), q)
+    mask = np.concatenate(sel.masks)
+    assert mask[:scored].any()
+    assert not mask[scored:].any()                # unscored never selected
+    assert sel.total_selected == int(mask.sum())
+
+
+# -- 1e8-record acceptance: bounded-memory streaming -------------------------
+
+@pytest.mark.slow
+def test_1e8_memmap_query_streams_with_bounded_memory(tmp_path):
+    """A 1e8-record memmap ScoreStore query completes with peak host
+    memory bounded by chunk size: the sketch is built chunk-by-chunk, no
+    flat cache or per-record sampling state is allocated, the selection
+    lands packed in a memmap BitmaskStore, and no full-corpus boolean mask
+    ever exists. Output is verified against the direct threshold baseline
+    chunk-by-chunk (counts over the whole corpus, bits over windows)."""
+    n = 100_000_000
+    chunk = 4_000_000
+    store = ScoreStore(tmp_path / "big.scores", n, create=True)
+    rng = np.random.default_rng(0)
+    for off in range(0, n, chunk):
+        store.write(off, rng.random(chunk, dtype=np.float32))
+
+    engine = SelectionEngine([store], num_bins=4096, use_kernel=False,
+                             weight_schemes=(), select_backend="ref",
+                             chunk_records=chunk)
+    # structural bounded-memory guarantees: no O(n) host state beyond the
+    # memmap itself
+    assert engine._flat is None
+    assert not engine._sampling_cache
+
+    def oracle_fn(idx):
+        return (store.scores[np.asarray(idx, np.int64)] > 0.9).astype(
+            np.float32)
+
+    q = SUPGQuery(target="recall", gamma=0.9, budget=3000, method="uniform")
+    sink = BitmaskStore(tmp_path / "big.bits")
+    sel = engine.run(jax.random.PRNGKey(1), oracle_fn, q, sink=sink)
+    assert 0.0 < sel.tau < 1.0
+    assert sel.sink is sink
+
+    # folded positives (below tau) per chunk, for exact count accounting
+    pos = sel.sampled_positive_global
+    folded = pos[np.asarray(store.scores[pos]) < sel.tau]
+    folded_per_chunk = np.bincount(folded // chunk, minlength=n // chunk)
+
+    popcount = np.asarray([bin(i).count("1") for i in range(256)], np.int64)
+    arr = sink._arr
+    total = 0
+    for ci, off in enumerate(range(0, n, chunk)):
+        scores_chunk = np.asarray(store.scores[off:off + chunk])
+        expect = int(np.count_nonzero(scores_chunk >= sel.tau))
+        got = int(popcount[arr[off // 8:(off + chunk) // 8]].sum())
+        assert got == expect + int(folded_per_chunk[ci]), (ci, got, expect)
+        total += got
+    assert sel.total_selected == total
+    # windows decoded bit-for-bit against the direct baseline
+    for w0 in (0, 48_000_000, n - 80_000):
+        w1 = w0 + 80_000
+        bits = np.unpackbits(np.asarray(arr[w0 // 8:w1 // 8]),
+                             bitorder="little").astype(bool)
+        expect = np.asarray(store.scores[w0:w1]) >= sel.tau
+        for g in folded[(folded >= w0) & (folded < w1)]:
+            expect[g - w0] = True
+        np.testing.assert_array_equal(bits, expect)
 
 
 # -- equivalence: engine vs single-host exact path ---------------------------

@@ -7,6 +7,8 @@ import pytest
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.linear_scan import ops as ls_ops
 from repro.kernels.score_hist import ops as sh_ops
+from repro.kernels.threshold_select import ops as ts_ops
+from repro.kernels.threshold_select import ref as ts_ref
 
 
 # --------------------------------------------------------------------------
@@ -116,3 +118,62 @@ def test_score_hist_total_count():
     s = jax.random.uniform(jax.random.PRNGKey(1), (5000,))
     counts, _, _ = sh_ops.score_hist(s, 512)
     assert float(jnp.sum(counts)) == 5000
+
+
+# --------------------------------------------------------------------------
+# threshold select (streaming emission pass)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 777, 1024, 4096, 10_000])
+@pytest.mark.parametrize("tau", [0.0, 0.3, 0.999, 1.0])
+def test_threshold_select_matches_ref(n, tau):
+    """Interpret-mode kernel == numpy nonzero reference, bit-for-bit,
+    including the -1 "unscored" sentinel mask and block padding."""
+    rng = np.random.default_rng(n)
+    s = rng.random(n).astype(np.float32)
+    s[rng.integers(0, n, max(n // 10, 1))] = -1.0   # unscored sentinels
+    out_k = ts_ops.threshold_select(s, tau, backend="interpret")
+    out_r = ts_ref.threshold_select_ref(s, tau)
+    np.testing.assert_array_equal(out_k, out_r)
+    assert out_k.dtype == np.int64
+    # ascending, valid, and count-consistent with a direct mask
+    assert np.all(np.diff(out_k) > 0)
+    assert out_k.size == int(((s >= tau) & (s >= 0)).sum())
+
+
+def test_threshold_select_never_selects_sentinel():
+    """Even at tau <= 0 the sentinel (-1) must never be selected."""
+    s = np.asarray([-1.0, 0.0, 0.5, -1.0, 1.0], np.float32)
+    for backend in ("interpret", "ref"):
+        out = ts_ops.threshold_select(s, 0.0, backend=backend)
+        np.testing.assert_array_equal(out, [1, 2, 4])
+
+
+def test_threshold_select_edge_cases():
+    assert ts_ops.threshold_select(np.empty(0, np.float32), 0.5).size == 0
+    all_sel = ts_ops.threshold_select(
+        np.full(2048, 0.9, np.float32), 0.5, backend="interpret")
+    np.testing.assert_array_equal(all_sel, np.arange(2048))
+    none_sel = ts_ops.threshold_select(
+        np.full(2048, 0.1, np.float32), 0.5, backend="interpret")
+    assert none_sel.size == 0
+
+
+def test_threshold_select_non_tile_aligned_block_falls_back():
+    """block_n not covered by the slot-tile layout routes to the jnp/numpy
+    fallback instead of failing (same contract as score_hist)."""
+    assert not ts_ops.kernel_supported(300)
+    assert ts_ops.kernel_supported(1024)
+    s = np.random.default_rng(0).random(1000).astype(np.float32)
+    out = ts_ops.threshold_select(s, 0.5, block_n=300, backend="interpret")
+    np.testing.assert_array_equal(out, ts_ref.threshold_select_ref(s, 0.5))
+
+
+def test_threshold_select_memmap_chunk(tmp_path):
+    """The reference path operates on memmap chunks without copying."""
+    p = tmp_path / "chunk.f32"
+    arr = np.memmap(p, np.float32, "w+", shape=(5000,))
+    arr[:] = np.random.default_rng(1).random(5000)
+    out = ts_ops.threshold_select(arr[1000:3000], 0.7, backend="ref")
+    np.testing.assert_array_equal(
+        out, np.nonzero(np.asarray(arr[1000:3000]) >= 0.7)[0])
