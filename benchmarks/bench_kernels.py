@@ -135,6 +135,87 @@ def bench_engine_selection():
           f"speedup={t_cold / t_batch:.1f}x")
 
 
+def bench_engine_build_workers():
+    """Engine cold-build wall time vs worker-pool size at 1e6 / 1e7.
+
+    Construction is one ChunkPlan-driven pass (fused sketch + sampling
+    chunk masses per span) through `pipeline.parallel_map`; workers=1
+    bypasses the pool entirely (the single-threaded baseline), workers>=4
+    should show the multi-core speedup on machines with the cores to back
+    it (CI trajectory row)."""
+    from repro.core.engine import SelectionEngine
+
+    rng = np.random.default_rng(5)
+    for n, label in ((1_000_000, "1e6"), (10_000_000, "1e7")):
+        scores = rng.beta(0.05, 1.0, n).astype(np.float32)
+        shards = np.array_split(scores, 8)
+        for w in (1, 4, 8):
+            t0 = time.perf_counter()
+            SelectionEngine(shards, num_bins=4096, use_kernel=False,
+                            chunk_records=1 << 18, workers=w)
+            t_us = (time.perf_counter() - t0) * 1e6
+            print(f"engine_cold_build_{label}_w{w},{t_us:.0f},"
+                  f"n={label};workers={w};shards=8;"
+                  f"recs_per_s={n / (t_us / 1e6):.3e}")
+
+
+def bench_engine_emission_workers():
+    """Streamed selection emission throughput vs worker-pool size at 1e7:
+    the ChunkPlan spans run threshold_select concurrently and the sink
+    serializes only its consume step, so emission scales with cores while
+    staying bit-for-bit identical to the serial walk. Uses the production
+    chunk size (4M records/span): spans small enough to sit in cache make
+    the serial walk artificially fast and the pool pure overhead."""
+    from repro.core.engine import SelectionEngine
+    from repro.data.pipeline import IndexSink
+
+    rng = np.random.default_rng(7)
+    n = 10_000_000
+    scores = rng.beta(0.05, 1.0, n).astype(np.float32)
+    shards = np.array_split(scores, 8)
+    pos = np.empty(0, np.int64)
+    base = None
+    for w in (1, 4, 8):
+        engine = SelectionEngine(shards, num_bins=4096, use_kernel=False,
+                                 workers=w)
+        engine._emit_selection(0.8, pos, 0, IndexSink(), None)   # warmup
+        # min over reps: the walk is a ~10 ms memory-bound pass, so the
+        # minimum is the stable estimator under scheduler noise.
+        times = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            sel = engine._emit_selection(0.8, pos, 0, IndexSink(), None)
+            times.append(time.perf_counter() - t0)
+        t_us = min(times) * 1e6
+        base = t_us if base is None else base
+        print(f"engine_emission_1e7_w{w},{t_us:.0f},workers={w};"
+              f"selected={sel.total_selected};"
+              f"recs_per_s={n / (t_us / 1e6):.3e};"
+              f"vs_w1={base / t_us:.2f}x")
+
+
+def bench_draw_sample():
+    """Hierarchical draw_sample throughput off the cached chunk-level
+    state: 1e6 records in 8 shards split into ~64 chunks, 1e4 draws per
+    call — the per-query sampling hot path (chunk categorical + streamed
+    within-chunk inverse-CDF)."""
+    from repro.core.engine import SelectionEngine
+
+    rng = np.random.default_rng(6)
+    scores = rng.beta(0.05, 1.0, 1_000_000).astype(np.float32)
+    engine = SelectionEngine(np.array_split(scores, 8), num_bins=4096,
+                             use_kernel=False, chunk_records=1 << 17)
+    s = 10_000
+    engine.draw_sample(jax.random.PRNGKey(0), s, "sqrt")      # warmup
+    reps = 5
+    t0 = time.perf_counter()
+    for r in range(reps):
+        engine.draw_sample(jax.random.PRNGKey(r), s, "sqrt")
+    t_us = (time.perf_counter() - t0) / reps * 1e6
+    print(f"engine_draw_sample,{t_us:.0f},s={s};scheme=sqrt;"
+          f"draws_per_s={s / (t_us / 1e6):.3e}")
+
+
 def bench_threshold_select():
     """Streaming-emission pass throughput at 1e6 / 1e7 records.
 
@@ -179,4 +260,6 @@ def bench_score_hist():
 
 
 ALL = [bench_flash_attention, bench_linear_scan, bench_score_hist,
-       bench_threshold_select, bench_engine_selection]
+       bench_threshold_select, bench_engine_selection,
+       bench_engine_build_workers, bench_engine_emission_workers,
+       bench_draw_sample]

@@ -12,7 +12,6 @@ os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=512")
 
 import argparse
-import re
 
 from repro.configs import SHAPES_BY_NAME, get_config
 

@@ -7,10 +7,13 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
                    (skipped silently if the dry-run artifact is absent)
 
 ``--json PATH`` additionally writes every captured row to a
-machine-readable trajectory file (CI uploads it as the BENCH_PR2.json
+machine-readable trajectory file (CI uploads it as the BENCH_PR3.json
 artifact per commit; ``--fast --json`` is the quick tier CI runs, covering
-engine cold-build, the run_many batch, and threshold_select throughput at
-1e6/1e7 records).
+engine cold-build at 1/4/8 workers, draw_sample throughput, the run_many
+batch, and threshold_select throughput at 1e6/1e7 records).
+``--baseline PATH`` diffs the captured rows against a committed trajectory
+file (the repo carries ``BENCH_PR3.json``) and prints a per-row delta
+table, so every CI run shows its drift from the checked-in baseline.
 """
 from __future__ import annotations
 
@@ -47,8 +50,22 @@ def main() -> None:
                     help="skip the slow statistical sweeps")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write captured rows as a machine-readable "
-                         "trajectory file (e.g. BENCH_PR2.json)")
+                         "trajectory file (e.g. BENCH_PR3.json)")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="committed trajectory file to diff against; "
+                         "prints a per-row delta table after the run")
     args = ap.parse_args()
+
+    baseline_rows = {}
+    if args.baseline:
+        # Read up front: --json may legitimately overwrite the same path.
+        try:
+            with open(args.baseline) as f:
+                baseline_rows = {r["name"]: r
+                                 for r in json.load(f).get("rows", [])}
+        except (OSError, ValueError, KeyError) as e:
+            print(f"baseline {args.baseline} unreadable ({e}); "
+                  "skipping delta table", file=sys.stderr)
 
     from benchmarks import bench_kernels, paper_figures
 
@@ -89,6 +106,23 @@ def main() -> None:
     except Exception:  # noqa: BLE001
         traceback.print_exc()
         failed.append("roofline")
+
+    if baseline_rows:
+        width = max((len(r["name"]) for r in rows), default=4) + 2
+        print(f"\n== delta vs {args.baseline} (negative = faster) ==")
+        print(f"{'name':<{width}}{'base_us':>12}{'now_us':>12}{'delta':>9}")
+        for r in rows:
+            base = baseline_rows.get(r["name"])
+            if base is None or base["us_per_call"] <= 0:
+                print(f"{r['name']:<{width}}{'(new)':>12}"
+                      f"{r['us_per_call']:>12.0f}{'':>9}")
+                continue
+            delta = (r["us_per_call"] / base["us_per_call"] - 1.0) * 100.0
+            print(f"{r['name']:<{width}}{base['us_per_call']:>12.0f}"
+                  f"{r['us_per_call']:>12.0f}{delta:>+8.1f}%")
+        gone = sorted(set(baseline_rows) - {r["name"] for r in rows})
+        if gone:
+            print(f"rows missing vs baseline: {gone}")
 
     if args.json:
         import jax

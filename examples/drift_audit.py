@@ -10,8 +10,7 @@ fresh (small) oracle budget, and the guarantee carries over automatically.
 import jax
 import numpy as np
 
-from repro.core import (SUPGQuery, array_oracle, precision_of, recall_of,
-                        run_query)
+from repro.core import SUPGQuery, array_oracle, recall_of, run_query
 from repro.core.thresholds import tau_unoci_r
 from repro.data.synthetic import make_drift_pair
 

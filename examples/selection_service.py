@@ -90,8 +90,10 @@ def main():
     print("[3/3] batched SUPG queries via SelectionEngine.run_many "
           "(budget=1500, delta=5%)")
     # The engine consumes the memory-mapped store directly (zero-copy) and
-    # builds its sketch + cached sampling state exactly once for the batch.
-    engine = SelectionEngine([store], num_bins=4096)
+    # builds its sketch + chunk-level sampling state exactly once for the
+    # batch; workers=2 drives the chunked sketch/emission walks through the
+    # thread pool (results are identical at any worker count).
+    engine = SelectionEngine([store], num_bins=4096, workers=2)
     oracle = array_oracle(labels)
 
     # Streamed serving: the client consumes selection chunks as the engine

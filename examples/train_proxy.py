@@ -9,11 +9,9 @@ tier) sized so a few hundred steps run on CPU in minutes. `--arch` accepts
 any registry id to train its smoke variant instead.
 """
 import argparse
-import pathlib
 import tempfile
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt.checkpoint import CheckpointManager

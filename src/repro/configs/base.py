@@ -13,7 +13,7 @@ Input shapes (assigned suite — seq_len x global_batch):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

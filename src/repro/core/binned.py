@@ -23,15 +23,18 @@ pure-jnp scatter-add formulation kept as the reference/fallback path.
 `weight_normalizers` feeds the SelectionEngine's cached sampling state: the
 global Σ sqrt(A), Σ A and n extracted from one merged sketch are the only
 cross-shard quantities the defensive-mixture draw probabilities need, so the
-engine never re-reduces raw shards per query.
+engine never re-reduces raw shards per query. `chunk_sketch_stats` is the
+per-chunk unit of the engine's streaming construction pass: it fuses the
+sketch reduction with the float64 per-chunk raw masses the hierarchical
+(shard → chunk → record) sampler persists, so bounded-memory importance
+sampling costs no extra data pass.
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple
+from typing import NamedTuple, Tuple
 
-import jax
 import jax.numpy as jnp
+import numpy as np
 
 DEFAULT_BINS = 4096
 
@@ -81,6 +84,25 @@ def build_sketch(scores, num_bins=DEFAULT_BINS, use_kernel=None):
         jnp.sqrt(a) * valid)
     sum_a = jnp.zeros(num_bins, jnp.float32).at[idx].add(a * valid)
     return ScoreSketch(counts, sum_w, sum_a)
+
+
+def chunk_sketch_stats(scores_chunk, num_bins=DEFAULT_BINS, use_kernel=None
+                       ) -> Tuple[ScoreSketch, float, float]:
+    """One streaming-pass unit over a chunk: its ScoreSketch plus the raw
+    sampling masses (float64 Σ sqrt(A), Σ A) the hierarchical sampler
+    persists per chunk.
+
+    The chunk is already in cache for the sketch reduction, so the two
+    extra sums are effectively free — this is what lets the engine cache
+    O(n / chunk_records) sampling state instead of per-record CDFs.
+    """
+    from repro.core import sampling
+
+    chunk32 = np.ascontiguousarray(scores_chunk, np.float32)
+    sketch = build_sketch(jnp.asarray(chunk32), num_bins,
+                          use_kernel=use_kernel)
+    s_sqrt, s_a = sampling.chunk_raw_masses(chunk32)
+    return sketch, s_sqrt, s_a
 
 
 def merge_sketches(*sketches):

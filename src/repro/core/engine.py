@@ -4,24 +4,41 @@ The engine is a *precomputation-cached, vectorized, sketch-driven* data
 plane: all O(n) work happens once at construction, after which any number of
 RT / PT / JT queries are served off cached per-shard state.
 
-Construction (one pass over the shards):
+Construction (one chunked pass over the shards, ChunkPlan-driven):
 
-  1. per-shard ScoreSketch via the fused Pallas score_hist kernel (compiled
-     on TPU, interpret-mode on CPU; jnp fallback for non-tile-aligned bin
-     counts), merged into the global sketch (one psum of 48 KiB on a fleet),
-  2. cached sampling state per (scheme, kappa): the global defensive-mixture
-     draw probabilities p(x) = (1-kappa)·raw(x)/Z + kappa/n and their
-     normalized within-shard CDFs for inverse-CDF draws — the normalizers
-     (Z_sqrt, Z_prop, n) come from `binned.weight_normalizers` on the merged
-     sketch, never from re-reducing raw shards,
-  3. shard-level sampling masses for the two-level (shard → record) draw,
-     derived from the per-shard sketches.
+  1. per-chunk `binned.chunk_sketch_stats` — the fused Pallas score_hist
+     sketch (compiled on TPU, interpret-mode on CPU; jnp fallback for
+     non-tile-aligned bin counts) plus the chunk's float64 raw sampling
+     masses (Σ sqrt(A), Σ A) in the same pass — merged into per-shard and
+     global sketches (one psum of 48 KiB on a fleet),
+  2. hierarchical sampling state: the per-chunk raw masses are the *only*
+     persistent per-data sampling state — O(n / chunk_records) floats per
+     (shard, scheme), never per-record arrays. Per (scheme, kappa) the
+     engine caches the per-shard chunk-mass CDFs (a chunk's defensive mass
+     is (1-kappa)·Σraw/Z + kappa·|chunk|/n, from the cached sums alone);
+     the normalizers (Z_sqrt, Z_prop, n) come from
+     `binned.weight_normalizers` on the merged sketch,
+  3. shard-level sampling masses for the (shard → chunk → record) draw are
+     the per-shard sums of those chunk masses.
 
-Query execution (zero O(n) recomputation per query):
+Every chunked walk — sketch construction, selection emission, the PT
+stage-2 region draw, and query-time chunk-draw resolution — iterates the
+same `data.pipeline.ChunkPlan` and runs through `pipeline.parallel_map`:
+with `workers > 1` a small thread pool drives the spans concurrently
+(memmap reads, the numpy threshold_select path and the float64 chunk
+reductions all release the GIL), with results written to preassigned
+slots so thread count never changes any output bit. Sinks carry the
+matching thread-safety contract (`SelectionSink` docstring).
 
-  * `draw_sample`   — multinomial over cached shard masses, then vectorized
-                      inverse-CDF draws against the cached per-shard CDFs,
-                      with globally-correct m(x) factors,
+Query execution (zero O(n) *state* per query):
+
+  * `draw_sample`   — multinomial over cached shard masses, then an
+                      inverse-CDF draw over the cached chunk-mass CDF, then
+                      an exact within-chunk inverse-CDF draw over freshly
+                      computed weights streaming *only the allocated
+                      chunks*; chunk mass × within-chunk p reproduces the
+                      defensive-mixture p(x) exactly, so the m(x) factors
+                      are globally correct with O(chunk) transient memory,
   * `score_at`      — `np.searchsorted` shard routing + per-shard fancy
                       gathers (no per-element Python loop),
   * tau estimation  — the exact sample-level estimators (Algorithms 2-5;
@@ -43,14 +60,16 @@ Query execution (zero O(n) recomputation per query):
                       counts are exact without dedup state.
 
 A query over a 1e8-record memmap store therefore peaks at O(chunk) host
-memory: no full-corpus boolean mask is ever allocated, `ShardedSelection`
-is a lazy view whose `total_selected` comes from per-shard counts, boolean
-masks only materialize if a caller explicitly asks for them, and the PT
-stage-2 uniform-in-D' draw is rank-routed through the same chunked pass.
-(The one remaining O(n) surface is the cached per-record inverse-CDF state
-behind importance-weighted sampling — construct with `weight_schemes=()`
-and use uniform/noci-method queries for fully bounded memory today; see
-the ROADMAP open item for chunking that state.)
+memory *for every method, importance-weighted included*: no full-corpus
+boolean mask or per-record CDF is ever allocated, `ShardedSelection` is a
+lazy view whose `total_selected` comes from per-shard counts, boolean masks
+only materialize if a caller explicitly asks for them, and the PT stage-2
+uniform-in-D' draw is rank-routed through the same chunked pass. The former
+O(n) surface — dense per-record inverse-CDF state behind `method="is"` —
+is gone: persistent sampling state is ≤ n / chunk_records entries per
+(shard, scheme) and record-level draws stream only their allocated chunks,
+so the `weight_schemes=()` escape hatch is no longer needed (the argument
+is kept as a cache pre-warm hint).
 
 `run_many` serves a *batch* of queries — SUPGQuery (RT/PT) and JointSUPGQuery
 (JT, Appendix A) — amortizing the sketch and the cached sampling state across
@@ -157,10 +176,12 @@ class ShardedSelection:
 
 
 @dataclasses.dataclass
-class _ShardSamplingState:
-    """Cached per-shard draw state for one (scheme, kappa) pair."""
-    p_global: np.ndarray   # (n_shard,) float32 global draw probability p(x)
-    cdf: np.ndarray        # (n_shard,) float64 normalized within-shard CDF
+class _ShardChunkState:
+    """Cached per-shard hierarchical draw state for one (scheme, kappa):
+    the shard's total defensive mass and its normalized chunk-mass CDF —
+    O(n_chunks) persistent floats, never per-record arrays."""
+    mass: float            # shard total defensive mass (unnormalized)
+    cdf: np.ndarray        # (n_chunks,) float64 normalized chunk-mass CDF
 
 
 class SelectionEngine:
@@ -172,7 +193,8 @@ class SelectionEngine:
                  kappa: float = sampling.DEFENSIVE_KAPPA,
                  cache_flat: Optional[bool] = None,
                  select_backend: Optional[str] = None,
-                 chunk_records: Optional[int] = None):
+                 chunk_records: Optional[int] = None,
+                 workers: Optional[int] = None):
         # ScoreStore (or anything exposing `.scores`) passes its memmap
         # through untouched; ndarray shards are viewed, not copied.
         raw_shards = [getattr(s, "scores", s) for s in shards]
@@ -197,95 +219,122 @@ class SelectionEngine:
         self.chunk_records = int(chunk_records or pipeline.CHUNK_RECORDS)
         self.select_backend = (select_ops.default_backend()
                                if select_backend is None else select_backend)
+        self.workers = max(1, int(workers)) if workers else 1
+        self.plan = pipeline.ChunkPlan(
+            [int(s.shape[0]) for s in self.shards], self.chunk_records)
         self._flat = (np.concatenate(
             [np.asarray(s, np.float32) for s in self.shards])
             if cache_flat and self.shards else None)
 
-        # 1. per-shard sketches (kernel path by default) + global merge.
-        #    Shards beyond chunk_records are sketched chunk-by-chunk and
-        #    merged (sketches are additive), so construction over memmap
-        #    shards never materializes a full shard either.
+        # 1. chunked construction pass (ChunkPlan-driven, threaded): each
+        #    span yields its ScoreSketch *and* its raw sampling masses in
+        #    one touch of the data. Sketches merge additively into
+        #    per-shard and global sketches, so even memmap shards never
+        #    materialize whole; the per-chunk masses become the persistent
+        #    O(n / chunk_records) hierarchical sampling state.
+        spans = list(self.plan)
+        stats = pipeline.parallel_map(
+            lambda sp: binned.chunk_sketch_stats(
+                self.shards[sp.shard_id][sp.start:sp.stop], num_bins,
+                use_kernel=use_kernel),
+            spans, self.workers)
+        parts: List[List] = [[] for _ in self.shards]
+        sums: List[List[Tuple[float, float, int]]] = [[] for _ in self.shards]
+        for sp, (sk, s_sqrt, s_a) in zip(spans, stats):
+            parts[sp.shard_id].append(sk)
+            sums[sp.shard_id].append((s_sqrt, s_a, sp.size))
+        # Empty shards get an all-zero sketch via the jnp path (the kernel
+        # grid cannot span a zero-length operand).
         self.shard_sketches = [
-            self._build_shard_sketch(s, num_bins, use_kernel)
-            for s in self.shards]
+            binned.merge_sketches(*p) if p else
+            binned.build_sketch(jnp.zeros((0,), jnp.float32), num_bins,
+                                use_kernel=False)
+            for p in parts]
         self.sketch = binned.merge_sketches(*self.shard_sketches)
+        self._chunk_masses = [
+            sampling.ChunkMasses(
+                np.asarray([t[0] for t in ss], np.float64),
+                np.asarray([t[1] for t in ss], np.float64),
+                np.asarray([t[2] for t in ss], np.int64))
+            if ss else sampling.ChunkMasses.empty()
+            for ss in sums]
 
         # 2. global weight normalizers from the merged sketch — the only
         #    cross-shard reductions sampling ever needs.
-        z_sqrt, z_prop, n_sk = binned.weight_normalizers(self.sketch)
+        z_sqrt, z_prop, _ = binned.weight_normalizers(self.sketch)
         self._z = {"sqrt": float(z_sqrt), "prop": float(z_prop)}
-        # 3. shard-level raw masses from the per-shard sketches.
-        self._shard_raw = {
-            "sqrt": np.asarray([float(jnp.sum(sk.sum_w))
-                                for sk in self.shard_sketches]),
-            "prop": np.asarray([float(jnp.sum(sk.sum_a))
-                                for sk in self.shard_sketches]),
-        }
-        self._shard_counts = np.asarray(
-            [s.shape[0] for s in self.shards], np.float64)
 
-        # 4. cached per-shard sampling state (CDFs) for the requested
-        #    schemes; other schemes build lazily on first use.
+        # 3. chunk-mass CDFs per (scheme, kappa) — O(n_chunks) each.
+        #    `weight_schemes` is a pre-warm hint only: since the dense
+        #    per-record CDFs are gone, every scheme is bounded-memory and
+        #    un-warmed schemes build lazily on first use.
         self._sampling_cache: Dict[Tuple[str, float], List[
-            _ShardSamplingState]] = {}
+            _ShardChunkState]] = {}
         for scheme in weight_schemes:
             self._sampling_state(scheme, self.kappa)
 
     # -- cached state ---------------------------------------------------
 
-    def _build_shard_sketch(self, scores, num_bins, use_kernel):
-        n = int(scores.shape[0])
-        if n <= self.chunk_records:
-            return binned.build_sketch(jnp.asarray(scores, jnp.float32),
-                                       num_bins, use_kernel=use_kernel)
-        parts = [
-            binned.build_sketch(
-                jnp.asarray(np.asarray(scores[o:o + self.chunk_records],
-                                       np.float32)),
-                num_bins, use_kernel=use_kernel)
-            for o in range(0, n, self.chunk_records)]
-        return binned.merge_sketches(*parts)
-
     def _sampling_state(self, scheme: str,
-                        kappa: float) -> List[_ShardSamplingState]:
+                        kappa: float) -> List[_ShardChunkState]:
         cache_key = (scheme, float(kappa))
         if cache_key not in self._sampling_cache:
-            z = max(self._z[scheme], 1e-30)
             states = []
-            for scores in self.shards:
-                if scores.shape[0] == 0:
-                    states.append(_ShardSamplingState(
-                        p_global=np.empty(0, np.float32),
-                        cdf=np.empty(0, np.float64)))
+            for cm in self._chunk_masses:
+                if cm.sizes.size == 0:   # empty shard: zero mass, no draws
+                    states.append(_ShardChunkState(
+                        mass=0.0, cdf=np.empty(0, np.float64)))
                     continue
-                a = np.clip(np.asarray(scores, np.float32), 0.0, 1.0)
-                raw = np.sqrt(a) if scheme == "sqrt" else a
-                p_global = ((1.0 - kappa) * raw / z
-                            + kappa / self.n_total).astype(np.float32)
-                states.append(_ShardSamplingState(
-                    p_global=p_global,
-                    cdf=sampling.normalized_cdf(p_global)))
+                m_c = sampling.defensive_chunk_mass(
+                    cm.raw(scheme), cm.sizes, self._z[scheme], kappa,
+                    self.n_total)
+                total = float(m_c.sum())
+                if not total > 0:
+                    raise ValueError(
+                        "shard has no sampling mass (kappa=0 with an "
+                        "all-zero proxy?)")
+                states.append(_ShardChunkState(
+                    mass=total, cdf=np.cumsum(m_c) / total))
             self._sampling_cache[cache_key] = states
         return self._sampling_cache[cache_key]
 
     def _shard_masses(self, scheme: str, kappa: float) -> np.ndarray:
-        raws = self._shard_raw[scheme]
-        z = max(self._z[scheme], 1e-30)
-        mass = (1.0 - kappa) * raws / z \
-            + kappa * self._shard_counts / self.n_total
+        states = self._sampling_state(scheme, kappa)
+        mass = np.asarray([st.mass for st in states], np.float64)
         return mass / mass.sum()
 
     # -- sampling -------------------------------------------------------
+
+    @staticmethod
+    def _group_sorted(values: np.ndarray, order: np.ndarray):
+        """Split `order` (an argsort of `values`) into runs of equal value.
+
+        Yields (value, positions) — the argsort-grouping trick `score_at`
+        uses, so grouping s draws over k groups costs one sort instead of
+        k boolean mask scans.
+        """
+        if order.size == 0:
+            return
+        sorted_vals = values[order]
+        cuts = np.flatnonzero(np.diff(sorted_vals)) + 1
+        for grp in np.split(order, cuts):
+            yield int(values[grp[0]]), grp
 
     def draw_sample(self, key, s: int, scheme: str = "sqrt",
                     kappa: Optional[float] = None):
         """Global with-replacement draws; returns (global_idx, m).
 
-        Two-level: multinomial over cached shard masses, then vectorized
-        inverse-CDF draws against the cached per-shard CDFs. The joint draw
-        probability equals the global defensive-mixed p(x) exactly (shard
-        mass is the shard's total p(x) by construction), so
-        m(x) = (1/n) / p(x) is globally correct.
+        Hierarchical (shard → chunk → record): multinomial over cached
+        shard masses, inverse-CDF over each shard's cached chunk-mass CDF,
+        then an exact within-chunk inverse-CDF draw over freshly computed
+        p(x) — only the allocated chunks are ever streamed, so transient
+        memory is O(chunk) and persistent state O(n_chunks). The joint
+        draw probability telescopes to the global defensive-mixed p(x)
+        (shard mass = Σ chunk masses, chunk mass = Σ p(x) over the chunk),
+        so m(x) = (1/n) / p(x) is globally correct. Draws are grouped by
+        shard and chunk with argsorts (no per-shard mask scans) and chunk
+        resolution runs through the worker pool; outputs land in
+        preassigned slots, so results are identical at any worker count.
         """
         if scheme == "uniform":
             idx = jax.random.randint(key, (s,), 0, self.n_total)
@@ -293,20 +342,36 @@ class SelectionEngine:
         kappa = self.kappa if kappa is None else kappa
         states = self._sampling_state(scheme, kappa)
         mass = self._shard_masses(scheme, kappa)
-        k_alloc, k_draw = jax.random.split(key)
+        k_alloc, k_chunk, k_rec = jax.random.split(key, 3)
         alloc = np.asarray(jax.random.categorical(
             k_alloc, jnp.log(jnp.asarray(mass, jnp.float32)), shape=(s,)))
-        u = np.asarray(jax.random.uniform(k_draw, (s,)), np.float64)
+        u_chunk = np.asarray(jax.random.uniform(k_chunk, (s,)), np.float64)
+        u_rec = np.asarray(jax.random.uniform(k_rec, (s,)), np.float64)
         out_idx = np.empty(s, np.int64)
         out_m = np.empty(s, np.float32)
-        for sh, state in enumerate(states):
-            take = np.nonzero(alloc == sh)[0]
-            if take.size == 0:
-                continue
-            local = sampling.draw_from_cdf(state.cdf, u[take])
-            out_idx[take] = self.offsets[sh] + local
-            out_m[take] = (1.0 / self.n_total) / np.maximum(
-                state.p_global[local], 1e-38)
+        work = []    # (shard_id, chunk_id, draw positions into [0, s))
+        for sh, seg in self._group_sorted(alloc,
+                                          np.argsort(alloc, kind="stable")):
+            chunk_ids = sampling.draw_from_cdf(states[sh].cdf, u_chunk[seg])
+            for ci, grp in self._group_sorted(
+                    chunk_ids, np.argsort(chunk_ids, kind="stable")):
+                work.append((sh, ci, seg[grp]))
+
+        chunk = self.plan.chunk_records
+
+        def resolve(item):
+            sh, ci, pos = item
+            start = ci * chunk
+            p = sampling.defensive_probs(
+                self.shards[sh][start:start + chunk], scheme,
+                self._z[scheme], kappa, self.n_total)
+            local = sampling.draw_from_cdf(sampling.normalized_cdf(p),
+                                           u_rec[pos])
+            out_idx[pos] = self.offsets[sh] + start + local
+            out_m[pos] = (1.0 / self.n_total) / np.maximum(
+                p[local], 1e-38)
+
+        pipeline.parallel_map(resolve, work, self.workers)
         return out_idx, out_m
 
     def score_at(self, global_idx) -> np.ndarray:
@@ -463,19 +528,23 @@ class SelectionEngine:
                         chunk_records: Optional[int]) -> ShardedSelection:
         """Stream {A >= tau} ∪ labeled-positives through a sink.
 
-        Shards are walked independently in fixed-size chunks through the
-        fused threshold_select pass, so peak host memory is O(chunk) and
-        per-shard counts accumulate in the sink — no full-corpus boolean
-        mask is ever allocated. Labeled positives are folded as a sink-level
-        merge of the positives *below* tau (those at/above tau stream out
-        of their own chunks), keeping fold/emit disjoint and counts exact.
-        Unscored records (the -1 sentinel) are never emitted by the
-        threshold pass; an unscored labeled positive still folds in, exactly
-        like the materialized path selected it.
+        The ChunkPlan spans are walked through the fused threshold_select
+        pass — concurrently across the worker pool when workers > 1 (the
+        sink serializes its own consumption; see its thread-safety
+        contract) — so peak host memory is O(chunk) and per-shard counts
+        accumulate in the sink; no full-corpus boolean mask is ever
+        allocated. Labeled positives are folded as a sink-level merge of
+        the positives *below* tau (those at/above tau stream out of their
+        own chunks), keeping fold/emit disjoint and counts exact. Unscored
+        records (the -1 sentinel) are never emitted by the threshold pass;
+        an unscored labeled positive still folds in, exactly like the
+        materialized path selected it.
         """
         sink = pipeline.IndexSink() if sink is None else sink
         chunk = int(chunk_records or self.chunk_records)
         sizes = [int(s.shape[0]) for s in self.shards]
+        plan = (self.plan if chunk == self.chunk_records
+                else pipeline.ChunkPlan(sizes, chunk))
         sink.open(sizes)
         if pos.size:
             below = pos[self.score_at(pos) < tau]
@@ -485,13 +554,15 @@ class SelectionEngine:
                 for shard_id in np.unique(sh_ids):
                     loc = below[sh_ids == shard_id] - self.offsets[shard_id]
                     sink.fold(int(shard_id), np.unique(loc))
-        for sh, scores in enumerate(self.shards):
-            for start in range(0, int(scores.shape[0]), chunk):
-                block = scores[start:start + chunk]
-                local = select_ops.threshold_select(
-                    block, tau, backend=self.select_backend)
-                if local.size:
-                    sink.emit(sh, start + local)
+
+        def emit_span(span):
+            block = self.shards[span.shard_id][span.start:span.stop]
+            local = select_ops.threshold_select(
+                block, tau, backend=self.select_backend)
+            if local.size:
+                sink.emit(span.shard_id, span.start + local)
+
+        pipeline.parallel_map(emit_span, plan, self.workers)
         counts = sink.close()
         return ShardedSelection(tau=float(tau), oracle_calls=oracle_calls,
                                 sampled_positive_global=pos, sink=sink,
@@ -500,10 +571,13 @@ class SelectionEngine:
     def _uniform_in_region(self, key, s, tau):
         """Uniform draws from {A >= tau} across shards, chunk-streamed.
 
-        Region sizes come from one chunked counting pass and draws are
-        rank-routed back through per-chunk threshold_select, so the PT
-        stage-2 restriction runs at O(chunk) peak memory like selection
-        emission — no full-shard mask or nonzero is ever materialized
+        One ChunkPlan counting pass (threaded over spans) yields per-chunk
+        region sizes; draws are then rank-routed through those cached
+        counts, so the resolution pass re-runs threshold_select only on
+        chunks that actually received draws — chunks whose region is empty
+        carry zero rank mass and are skipped for free. The PT stage-2
+        restriction therefore runs at O(chunk) peak memory like selection
+        emission: no full-shard mask or nonzero is ever materialized
         (unscored sentinel records are excluded, like emission).
 
         Shards whose region is empty get exactly zero categorical mass (no
@@ -513,16 +587,23 @@ class SelectionEngine:
         which keeps the estimator valid (D' restriction is an efficiency
         device, never a correctness requirement).
         """
-        chunk = self.chunk_records
-        per_shard = []           # per-shard arrays of per-chunk region sizes
-        for scores in self.shards:
-            n = int(scores.shape[0])
-            cc = [0] if n == 0 else []
-            for o in range(0, n, chunk):
-                c = np.asarray(scores[o:o + chunk], np.float32)
-                cc.append(int(np.count_nonzero((c >= tau) & (c >= 0.0))))
-            per_shard.append(np.asarray(cc, np.int64))
-        counts = np.asarray([cc.sum() for cc in per_shard], np.float64)
+        plan = self.plan
+        spans = list(plan)
+
+        def count_span(span):
+            # Count through the exact same selection pass the resolve step
+            # uses: any dtype/backend rounding disagreement between the two
+            # would desynchronize ranks from region sizes.
+            return select_ops.threshold_select(
+                self.shards[span.shard_id][span.start:span.stop], tau,
+                backend=self.select_backend).size
+
+        span_counts = pipeline.parallel_map(count_span, spans, self.workers)
+        per_shard = [np.zeros(plan.num_chunks(sh), np.int64)
+                     for sh in range(len(self.shards))]
+        for span, c in zip(spans, span_counts):
+            per_shard[span.shard_id][span.chunk_id] = c
+        counts = np.asarray([pc.sum() for pc in per_shard], np.float64)
         total = counts.sum()
         if total == 0:
             idx = jax.random.randint(key, (s,), 0, self.n_total)
@@ -534,20 +615,28 @@ class SelectionEngine:
             k_alloc, jnp.log(jnp.asarray(mass, jnp.float32)), shape=(s,)))
         out = np.empty(s, np.int64)
         dkeys = jax.random.split(k_draw, len(self.shards))
-        for sh, scores in enumerate(self.shards):
-            take = np.nonzero(alloc == sh)[0]
-            if take.size == 0:
-                continue
+        work = []    # (shard_id, chunk_id, positions, in-chunk region ranks)
+        for sh, seg in self._group_sorted(alloc,
+                                          np.argsort(alloc, kind="stable")):
             cum = np.concatenate([[0], np.cumsum(per_shard[sh])])
-            # uniform region ranks, then rank -> (chunk, offset-in-chunk)
+            # uniform region ranks, then rank -> (chunk, offset-in-chunk);
+            # only chunks with nonzero region counts can be hit.
             r = np.asarray(jax.random.randint(
-                dkeys[sh], (take.size,), 0, int(cum[-1])), np.int64)
+                dkeys[sh], (seg.size,), 0, int(cum[-1])), np.int64)
             ch = np.searchsorted(cum, r, side="right") - 1
-            for c_id in np.unique(ch):
-                in_chunk = ch == c_id
-                region = select_ops.threshold_select(
-                    scores[c_id * chunk:(c_id + 1) * chunk], tau,
-                    backend=self.select_backend)
-                out[take[in_chunk]] = (self.offsets[sh] + c_id * chunk
-                                       + region[r[in_chunk] - cum[c_id]])
+            corder = np.argsort(ch, kind="stable")
+            for ci, grp in self._group_sorted(ch, corder):
+                work.append((sh, ci, seg[grp], r[grp] - cum[ci]))
+
+        chunk = plan.chunk_records
+
+        def resolve(item):
+            sh, ci, pos, ranks = item
+            start = ci * chunk
+            region = select_ops.threshold_select(
+                self.shards[sh][start:start + chunk], tau,
+                backend=self.select_backend)
+            out[pos] = self.offsets[sh] + start + region[ranks]
+
+        pipeline.parallel_map(resolve, work, self.workers)
         return out

@@ -19,7 +19,6 @@ an optimistic budget then exhaustively filter false positives.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import numpy as np

@@ -16,7 +16,7 @@ shard cleanly over a data axis.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -118,11 +118,15 @@ def sample_weighted_masked(key, probs, mask, s):
 # ---------------------------------------------------------------------------
 # Host-side CDF primitives for the engine's cached sampling state
 # ---------------------------------------------------------------------------
-# The SelectionEngine precomputes one normalized CDF per (shard, scheme) at
-# construction and then serves every query's within-shard draws by inverse-
-# CDF lookup — no per-query O(n) weight recomputation. float64 keeps the
-# prefix sums exact enough at 1e8+ records per shard that the final entry is
-# a faithful normalizer (fp32 cumsum loses ~2 decimal digits at that scale).
+# The SelectionEngine's cached state is *hierarchical*: per (shard, scheme)
+# it persists only the per-chunk raw masses accumulated during the sketch
+# pass — O(n / chunk_records) floats — and resolves record-level draws at
+# query time by streaming just the allocated chunks (categorical over chunk
+# masses, then an exact inverse-CDF draw over freshly computed within-chunk
+# weights). Because a chunk's defensive-mixture mass is exactly the sum of
+# its records' p(x), chunk mass × within-chunk p reproduces the global p(x),
+# so m(x) = (1/n)/p(x) stays exact with no O(n) state. float64 keeps the
+# prefix sums faithful at 1e8+ records.
 
 def normalized_cdf(weights) -> np.ndarray:
     """Inclusive float64 prefix CDF, renormalized to end exactly at 1."""
@@ -138,6 +142,64 @@ def draw_from_cdf(cdf: np.ndarray, u) -> np.ndarray:
     """Vectorized inverse-CDF draws: indices such that cdf[i-1] <= u < cdf[i]."""
     idx = np.searchsorted(cdf, np.asarray(u, np.float64), side="left")
     return np.minimum(idx, cdf.shape[0] - 1).astype(np.int64)
+
+
+class ChunkMasses(NamedTuple):
+    """Per-chunk raw sampling masses for one shard (the persistent half of
+    the hierarchical sampler — O(n_chunks), never O(n_records)).
+
+    Accumulated during the chunked sketch pass at engine construction: the
+    chunk is already in cache there, so the two extra float64 reductions are
+    effectively free. `sizes` counts *all* records in the chunk (unscored
+    sentinels included) because the defensive uniform component kappa/n
+    gives every record mass, exactly like the dense p(x) formula.
+    """
+
+    sum_sqrt: np.ndarray   # (n_chunks,) float64 Σ sqrt(clip(A)) per chunk
+    sum_a: np.ndarray      # (n_chunks,) float64 Σ clip(A) per chunk
+    sizes: np.ndarray      # (n_chunks,) int64 record count per chunk
+
+    def raw(self, scheme: str) -> np.ndarray:
+        return self.sum_sqrt if scheme == "sqrt" else self.sum_a
+
+    @classmethod
+    def empty(cls) -> "ChunkMasses":
+        return cls(np.empty(0, np.float64), np.empty(0, np.float64),
+                   np.empty(0, np.int64))
+
+
+def chunk_raw_masses(scores_chunk) -> Tuple[float, float]:
+    """Float64 Σ sqrt(A) and Σ A over one chunk (sentinels contribute 0)."""
+    a = np.clip(np.asarray(scores_chunk, np.float32), 0.0, 1.0)
+    return (float(np.sum(np.sqrt(a), dtype=np.float64)),
+            float(np.sum(a, dtype=np.float64)))
+
+
+def defensive_chunk_mass(raw: np.ndarray, sizes: np.ndarray, z: float,
+                         kappa: float, n_total: int) -> np.ndarray:
+    """Total defensive-mixture draw probability of each chunk.
+
+    Summing p(x) = (1-kappa)·raw(x)/Z + kappa/n over a chunk gives
+    (1-kappa)·Σraw/Z + kappa·|chunk|/n — computable from the cached chunk
+    masses alone, so the chunk-level categorical needs no record access.
+    """
+    z = max(float(z), 1e-30)
+    return ((1.0 - kappa) * np.asarray(raw, np.float64) / z
+            + kappa * np.asarray(sizes, np.float64) / n_total)
+
+
+def defensive_probs(scores_chunk, scheme: str, z: float, kappa: float,
+                    n_total: int) -> np.ndarray:
+    """Global draw probabilities p(x) for the records of one chunk.
+
+    Bit-identical to the formula the dense per-record path used (float32
+    p values), so the hierarchical draw's m(x) factors match the dense
+    sampler's exactly at matched records.
+    """
+    z = max(float(z), 1e-30)
+    a = np.clip(np.asarray(scores_chunk, np.float32), 0.0, 1.0)
+    raw = np.sqrt(a) if scheme == "sqrt" else a
+    return ((1.0 - kappa) * raw / z + kappa / n_total).astype(np.float32)
 
 
 @functools.partial(jax.jit, static_argnames=("s", "scheme", "defensive"))

@@ -14,13 +14,23 @@ Production posture:
     selected record indices shard-by-shard in fixed-size chunks into a
     `SelectionSink` (in-memory `IndexSink`, memmap-packed `BitmaskStore`,
     or `CallbackSink`/`SelectionStream` for service streaming), so a query
-    over 1e8+ records never allocates a full-corpus boolean mask.
+    over 1e8+ records never allocates a full-corpus boolean mask;
+  * every chunked walk — sketch construction, selection emission, the PT
+    stage-2 region draw, `ScoreStore.num_scored` — iterates one shared
+    `ChunkPlan` (shard → chunk spans), and `parallel_map` drives those
+    spans through a small thread pool: memmap reads and the numpy
+    selection/reduction paths release the GIL, so the walks scale across
+    cores. Sinks carry an explicit thread-safety contract (see
+    `SelectionSink`).
 """
 from __future__ import annotations
 
+import concurrent.futures
+import dataclasses
 import queue
 import threading
-from typing import Callable, Iterator, List, Optional, Sequence
+from typing import (Callable, Iterable, Iterator, List, Optional, Sequence,
+                    TypeVar)
 
 import numpy as np
 
@@ -28,6 +38,83 @@ import numpy as np
 # chunk) — big enough to amortize per-chunk overheads, small enough that
 # per-query peak host memory stays O(chunk), not O(corpus).
 CHUNK_RECORDS = 1 << 22
+
+_T = TypeVar("_T")
+_R = TypeVar("_R")
+
+
+# ---------------------------------------------------------------------------
+# ChunkPlan — the shared shard → chunk iteration contract
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChunkSpan:
+    """One unit of streaming work: a half-open [start, stop) record range
+    inside one shard. `chunk_id` is the span's dense index within its shard,
+    so per-chunk state (sampling masses, region counts) lines up with the
+    span order without any extra bookkeeping."""
+    shard_id: int
+    chunk_id: int
+    start: int
+    stop: int
+
+    @property
+    def size(self) -> int:
+        return self.stop - self.start
+
+
+class ChunkPlan:
+    """Shard → chunk decomposition shared by every streaming pass.
+
+    One plan instance replaces the hand-rolled ``range(0, n, chunk)`` loops
+    that used to live in sketch construction, selection emission, and the
+    PT stage-2 region walk: all of them iterate the same spans, so per-chunk
+    state computed by one pass (e.g. the sampling chunk masses accumulated
+    during the sketch pass) is addressable by any other via
+    ``(shard_id, chunk_id)``. Empty shards contribute no spans.
+    """
+
+    def __init__(self, shard_sizes: Sequence[int], chunk_records: int):
+        if chunk_records <= 0:
+            raise ValueError("chunk_records must be positive")
+        self.shard_sizes = [int(n) for n in shard_sizes]
+        self.chunk_records = int(chunk_records)
+
+    def num_chunks(self, shard_id: int) -> int:
+        n = self.shard_sizes[shard_id]
+        return -(-n // self.chunk_records)
+
+    @property
+    def total_chunks(self) -> int:
+        return sum(self.num_chunks(sh) for sh in range(len(self.shard_sizes)))
+
+    def shard_spans(self, shard_id: int) -> List[ChunkSpan]:
+        n = self.shard_sizes[shard_id]
+        c = self.chunk_records
+        return [ChunkSpan(shard_id, ci, o, min(o + c, n))
+                for ci, o in enumerate(range(0, n, c))]
+
+    def __iter__(self) -> Iterator[ChunkSpan]:
+        for shard_id in range(len(self.shard_sizes)):
+            yield from self.shard_spans(shard_id)
+
+
+def parallel_map(fn: Callable[[_T], _R], items: Iterable[_T],
+                 workers: int = 1) -> List[_R]:
+    """Map `fn` over `items`, preserving order; threaded when workers > 1.
+
+    The streaming plane's worker pool: memmap chunk reads, numpy reductions
+    and the `threshold_select` numpy path all release the GIL, so shard and
+    chunk walks scale across cores without processes. With workers <= 1 this
+    is a plain in-order loop — identical results, zero thread overhead — so
+    callers get determinism-by-construction: work items carry their output
+    slot and never depend on completion order.
+    """
+    items = list(items)
+    if workers <= 1 or len(items) <= 1:
+        return [fn(it) for it in items]
+    with concurrent.futures.ThreadPoolExecutor(max_workers=workers) as ex:
+        return list(ex.map(fn, items))
 
 
 class DeterministicSource:
@@ -139,11 +226,10 @@ class ScoreStore:
         `write` invalidates the cache.
         """
         if self._num_scored is None:
-            total = 0
-            for off in range(0, int(self._arr.shape[0]), CHUNK_RECORDS):
-                total += int(
-                    (self._arr[off:off + CHUNK_RECORDS] >= 0).sum())
-            self._num_scored = total
+            plan = ChunkPlan([int(self._arr.shape[0])], CHUNK_RECORDS)
+            self._num_scored = sum(
+                int((self._arr[sp.start:sp.stop] >= 0).sum())
+                for sp in plan)
         return self._num_scored
 
 
@@ -159,13 +245,23 @@ class SelectionSink:
         open(shard_sizes)              once, before any emission
         fold(shard_id, local_idx)      labeled positives *below* tau
                                        (Algorithm 1's R1, sink-level merge)
-        emit(shard_id, local_idx)      ascending in-chunk, chunks in order
-                                       per shard; disjoint from fold()
+        emit(shard_id, local_idx)      ascending in-chunk; disjoint from
+                                       fold()
         close() -> per-shard counts    once, after the last chunk
 
     emit/fold receive *shard-local* indices; `offsets` maps them to global
     ids. Because the engine guarantees fold/emit disjointness, the base
     class's per-shard counts are exact without any dedup state.
+
+    Thread-safety contract: with an engine worker pool (workers > 1) `emit`
+    may be called concurrently from multiple threads, including for chunks
+    of the *same* shard, and chunk arrival order is unspecified. The base
+    class serializes each call (count update + `_consume`) under one lock,
+    so subclasses only need per-shard buffers that tolerate interleaved
+    appends and are merged into canonical order at `close()` — exactly what
+    `IndexSink` does with its per-shard chunk lists. With workers == 1 the
+    legacy ordering (chunks ascending per shard, shards in order) still
+    holds. `open`, `fold` and `close` are always driver-thread only.
     """
 
     def open(self, shard_sizes: Sequence[int]) -> None:
@@ -173,20 +269,23 @@ class SelectionSink:
         self.offsets = np.concatenate(
             [[0], np.cumsum(self.shard_sizes)]).astype(np.int64)
         self.counts = np.zeros(len(self.shard_sizes), np.int64)
+        self._lock = threading.Lock()
 
     def emit(self, shard_id: int, local_idx: np.ndarray) -> None:
         local_idx = np.asarray(local_idx, np.int64)
         if local_idx.size == 0:
             return
-        self.counts[shard_id] += local_idx.size
-        self._consume(shard_id, local_idx, folded=False)
+        with self._lock:
+            self.counts[shard_id] += local_idx.size
+            self._consume(shard_id, local_idx, folded=False)
 
     def fold(self, shard_id: int, local_idx: np.ndarray) -> None:
         local_idx = np.asarray(local_idx, np.int64)
         if local_idx.size == 0:
             return
-        self.counts[shard_id] += local_idx.size
-        self._consume(shard_id, local_idx, folded=True)
+        with self._lock:
+            self.counts[shard_id] += local_idx.size
+            self._consume(shard_id, local_idx, folded=True)
 
     def close(self) -> np.ndarray:
         self._finalize()

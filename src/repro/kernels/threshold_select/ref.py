@@ -14,7 +14,9 @@ def threshold_select_ref(scores, tau) -> np.ndarray:
     """Ascending local indices of {i : scores[i] >= tau and scores[i] >= 0}.
 
     Entries below 0 are the "unscored" sentinel (-1) and are never selected,
-    matching the kernel's validity mask bit-for-bit.
+    matching the kernel's validity mask bit-for-bit. The two conditions
+    fold into one comparison against max(tau, 0) — same set for every
+    input, half the temporaries, one pass instead of three.
     """
     s = np.asarray(scores)
-    return np.nonzero((s >= tau) & (s >= 0.0))[0].astype(np.int64)
+    return np.nonzero(s >= max(float(tau), 0.0))[0].astype(np.int64)

@@ -36,7 +36,6 @@ import re
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import (ARCH_IDS, SHAPES, get_config, shape_applicable)
 from repro.launch import serve as servelib

@@ -8,11 +8,9 @@ examples/selection_service.py on small configs.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.launch import sharding as shardlib
 from repro.models import model as modellib

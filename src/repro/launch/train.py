@@ -20,14 +20,12 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch import sharding as shardlib
-from repro.launch.mesh import data_axes
 from repro.models import model as modellib
 from repro.optim import adamw
 

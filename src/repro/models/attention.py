@@ -13,8 +13,6 @@ is the technique's entire point.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -14,8 +14,6 @@ records").
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -20,13 +20,10 @@ jax.checkpoint so the backward pass recomputes block internals.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
 from repro.models import attention, layers, mamba, moe, rwkv
-from repro.models.layers import matmul
 
 
 def _split_stack(key, n, init_fn):

@@ -22,8 +22,6 @@ def _install_hypothesis_fallback():
     except ImportError:
         pass
 
-    import functools
-
     import numpy as np
 
     class _Strategy:

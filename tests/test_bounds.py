@@ -1,5 +1,4 @@
 """Unit + property tests for the Lemma-1 confidence bounds."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st

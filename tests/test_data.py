@@ -4,9 +4,9 @@ import numpy as np
 import pytest
 
 from repro.data import synthetic
-from repro.data.pipeline import (BitmaskStore, CallbackSink,
+from repro.data.pipeline import (BitmaskStore, CallbackSink, ChunkPlan,
                                  DeterministicSource, IndexSink, Prefetcher,
-                                 ScoreStore, SelectionStream)
+                                 ScoreStore, SelectionStream, parallel_map)
 
 
 def test_beta_dataset_properties():
@@ -104,6 +104,64 @@ def test_score_store_write_rejects_out_of_range(tmp_path):
     assert store.num_scored == 0               # nothing landed
     store.write(5, np.ones(5, np.float32))     # exact-fit tail is fine
     assert store.num_scored == 5
+
+
+# -- ChunkPlan + worker pool -------------------------------------------------
+
+
+def test_chunk_plan_spans_cover_shards():
+    """Spans tile every shard exactly, shard-major, with dense chunk ids;
+    empty shards contribute no spans."""
+    plan = ChunkPlan([10, 0, 7], 4)
+    spans = [(s.shard_id, s.chunk_id, s.start, s.stop) for s in plan]
+    assert spans == [(0, 0, 0, 4), (0, 1, 4, 8), (0, 2, 8, 10),
+                     (2, 0, 0, 4), (2, 1, 4, 7)]
+    assert [plan.num_chunks(sh) for sh in range(3)] == [3, 0, 2]
+    assert plan.total_chunks == 5
+    assert [sp.size for sp in plan.shard_spans(0)] == [4, 4, 2]
+    # whole-shard plan: one span per shard
+    assert ChunkPlan([10, 0, 7], 64).total_chunks == 2
+
+
+def test_chunk_plan_rejects_nonpositive_chunk():
+    with pytest.raises(ValueError):
+        ChunkPlan([10], 0)
+
+
+def test_parallel_map_preserves_order_and_results():
+    items = list(range(97))
+    expect = [x * x for x in items]
+    assert parallel_map(lambda x: x * x, items, workers=1) == expect
+    assert parallel_map(lambda x: x * x, items, workers=4) == expect
+    assert parallel_map(lambda x: x, [], workers=4) == []
+
+
+def test_parallel_map_propagates_exceptions():
+    def boom(x):
+        if x == 13:
+            raise RuntimeError("boom")
+        return x
+
+    with pytest.raises(RuntimeError):
+        parallel_map(boom, range(20), workers=4)
+    with pytest.raises(RuntimeError):
+        parallel_map(boom, range(20), workers=1)
+
+
+def test_sink_concurrent_emit_same_shard():
+    """The sink thread-safety contract: concurrent emit() calls — including
+    for chunks of the same shard, in any order — must produce exact counts
+    and canonically sorted per-shard indices after close()."""
+    sink = IndexSink()
+    sink.open([10_000])
+    chunks = [np.arange(o, o + 100, dtype=np.int64) for o in
+              range(0, 10_000, 100)]
+    rng = np.random.default_rng(0)
+    order = rng.permutation(len(chunks))
+    parallel_map(lambda i: sink.emit(0, chunks[i]), order, workers=8)
+    counts = sink.close()
+    np.testing.assert_array_equal(counts, [10_000])
+    np.testing.assert_array_equal(sink.indices(0), np.arange(10_000))
 
 
 # -- selection sinks ---------------------------------------------------------

@@ -63,6 +63,19 @@ def test_uniform_in_region_chunked_rank_routing():
         frac, region_per_shard / region_per_shard.sum(), atol=0.05)
 
 
+def test_uniform_in_region_count_and_resolve_agree_on_float64():
+    """Regression: the counting pass used to compare in float32 while the
+    rank-routed resolve pass compared in the shard's native dtype; a
+    float64 score inside the float32 rounding gap around tau then made the
+    counted region larger than the resolved one (IndexError on the rank).
+    Both passes now run the identical threshold_select backend."""
+    scores = np.array([0.5000000001, 0.7] * 500, np.float64)
+    engine = SelectionEngine([scores], num_bins=512, chunk_records=128)
+    tau = 0.5000000002                      # rounds below 0.5000000001 in f32
+    idx = engine._uniform_in_region(jax.random.PRNGKey(0), 2000, tau)
+    assert np.all(scores[idx] >= tau)
+
+
 def test_uniform_in_region_globally_empty_falls_back_to_uniform():
     engine = SelectionEngine([np.zeros(100, np.float32),
                               np.zeros(50, np.float32)], num_bins=512)
@@ -305,6 +318,139 @@ def test_partially_scored_store_sketch_parity_and_selection(tmp_path):
     assert sel.total_selected == int(mask.sum())
 
 
+# -- hierarchical sampler: chunk-level state + dense equivalence --------------
+
+def _dense_probs(engine, scheme):
+    """The dense per-record defensive-mixture p(x) the pre-hierarchical
+    engine materialized — the reference distribution for equivalence."""
+    z = max(engine._z[scheme], 1e-30)
+    flat = np.concatenate([np.asarray(s, np.float32) for s in engine.shards])
+    a = np.clip(flat, 0.0, 1.0)
+    raw = np.sqrt(a) if scheme == "sqrt" else a
+    return ((1.0 - engine.kappa) * raw / z
+            + engine.kappa / engine.n_total).astype(np.float32)
+
+
+def test_sampling_state_is_chunk_level():
+    """Persistent sampling state must be O(n / chunk_records) per
+    (shard, scheme) — chunk-mass CDFs, never per-record arrays."""
+    rng = np.random.default_rng(3)
+    shards = [rng.random(n).astype(np.float32) for n in (9000, 100, 4096)]
+    engine = SelectionEngine(shards, num_bins=512, chunk_records=1024,
+                             weight_schemes=("sqrt", "prop"))
+    assert len(engine._sampling_cache) == 2
+    for states in engine._sampling_cache.values():
+        for sh, st in enumerate(states):
+            n_chunks = -(-shards[sh].shape[0] // 1024)
+            assert st.cdf.size == n_chunks == engine.plan.num_chunks(sh)
+            assert not hasattr(st, "p_global")
+    for sh, cm in enumerate(engine._chunk_masses):
+        assert cm.sizes.size == engine.plan.num_chunks(sh)
+        assert int(cm.sizes.sum()) == shards[sh].shape[0]
+
+
+@pytest.mark.parametrize("scheme", ["sqrt", "prop"])
+def test_hierarchical_draw_matches_dense_distribution(scheme):
+    """Fixed-key statistical equivalence vs the dense-CDF path: the
+    hierarchical (shard → chunk → record) draw must target exactly the
+    dense defensive-mixture p(x), verified by a chi-square over index bins
+    against the dense probabilities."""
+    from scipy import stats
+
+    rng = np.random.default_rng(17)
+    scores = rng.beta(0.2, 1.0, 30_000).astype(np.float32)
+    engine = SelectionEngine(np.array_split(scores, 3), num_bins=1024,
+                             chunk_records=2048)
+    s = 60_000
+    idx, _ = engine.draw_sample(jax.random.PRNGKey(0), s, scheme)
+    p = _dense_probs(engine, scheme).astype(np.float64)
+    bins = 50
+    edges = np.linspace(0, engine.n_total, bins + 1).astype(np.int64)
+    f_obs = np.histogram(idx, bins=edges)[0]
+    mass = np.add.reduceat(p, edges[:-1])
+    f_exp = f_obs.sum() * mass / mass.sum()
+    assert stats.chisquare(f_obs, f_exp).pvalue > 1e-3
+
+
+@pytest.mark.parametrize("scheme", ["sqrt", "prop"])
+def test_hierarchical_draw_m_p_identity(scheme):
+    """Exactness per draw: m(x)·p(x) ≡ 1/n against the dense p(x) — the
+    within-chunk weights recomputed at query time reproduce the global
+    defensive mixture record-for-record, so reweighting stays unbiased
+    with no O(n) state."""
+    rng = np.random.default_rng(23)
+    scores = rng.random(20_000).astype(np.float32)
+    scores[rng.integers(0, 20_000, 700)] = -1.0     # unscored sentinels
+    engine = SelectionEngine(np.array_split(scores, 4), num_bins=512,
+                             chunk_records=1500)
+    idx, m = engine.draw_sample(jax.random.PRNGKey(11), 10_000, scheme)
+    p = _dense_probs(engine, scheme).astype(np.float64)
+    np.testing.assert_allclose(m.astype(np.float64) * p[idx],
+                               1.0 / engine.n_total, rtol=1e-5)
+
+
+def test_draw_sample_worker_count_invariant():
+    """Thread count must never change a single output bit: draws are
+    grouped to preassigned slots before the pool runs."""
+    rng = np.random.default_rng(29)
+    shards = [rng.random(n).astype(np.float32) for n in (7000, 0, 12_000)]
+    key = jax.random.PRNGKey(3)
+    e1 = SelectionEngine(shards, num_bins=512, chunk_records=1024, workers=1)
+    e8 = SelectionEngine(shards, num_bins=512, chunk_records=1024, workers=8)
+    for a, b in zip(e1.sketch, e8.sketch):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for scheme in ("sqrt", "prop", "uniform"):
+        i1, m1 = e1.draw_sample(key, 5000, scheme)
+        i8, m8 = e8.draw_sample(key, 5000, scheme)
+        np.testing.assert_array_equal(i1, i8)
+        np.testing.assert_array_equal(m1, m8)
+    r1 = e1._uniform_in_region(key, 4000, 0.6)
+    r8 = e8._uniform_in_region(key, 4000, 0.6)
+    np.testing.assert_array_equal(r1, r8)
+
+
+@pytest.mark.parametrize("qspec", ["rt", "pt", "jt"])
+def test_threaded_queries_match_serial(tmp_path, qspec):
+    """Full queries through the worker pool return bit-for-bit the serial
+    results, through in-memory, memmap-bitmask and callback sinks."""
+    ds = make_beta(50_000, 0.02, 1.0, seed=44)
+    oracle = array_oracle(ds.labels)
+    kw = dict(num_bins=1024, chunk_records=3000)
+    serial = SelectionEngine(np.array_split(ds.scores, 4), **kw)
+    threaded = SelectionEngine(np.array_split(ds.scores, 4), workers=4, **kw)
+    q = {"rt": SUPGQuery(target="recall", gamma=0.9, budget=2000),
+         "pt": SUPGQuery(target="precision", gamma=0.8, budget=2000,
+                         method="is", two_stage=True),
+         "jt": JointSUPGQuery(gamma_recall=0.85, stage_budget=2000)}[qspec]
+    key = jax.random.PRNGKey(13)
+
+    def run(engine, sink=None):
+        if qspec == "jt":
+            return engine.run_joint(key, oracle, q, sink=sink)
+        return engine.run(key, oracle, q, sink=sink)
+
+    base = run(serial)
+    got = run(threaded)
+    assert got.tau == base.tau
+    np.testing.assert_array_equal(got.shard_counts, base.shard_counts)
+    np.testing.assert_array_equal(np.concatenate(got.masks),
+                                  np.concatenate(base.masks))
+    bits = BitmaskStore(tmp_path / f"{qspec}.bits")
+    np.testing.assert_array_equal(
+        np.concatenate(run(threaded, sink=bits).masks),
+        np.concatenate(base.masks))
+    # callback sink: chunk arrival order is unspecified under the pool,
+    # but the rebuilt selection must match exactly
+    got_chunks = [[] for _ in threaded.shards]
+    run(threaded, sink=CallbackSink(
+        lambda sh, gids, folded: got_chunks[sh].append(gids)))
+    rebuilt = np.zeros(threaded.n_total, bool)
+    for chunks in got_chunks:
+        if chunks:
+            rebuilt[np.concatenate(chunks)] = True
+    np.testing.assert_array_equal(rebuilt, np.concatenate(base.masks))
+
+
 # -- 1e8-record acceptance: bounded-memory streaming -------------------------
 
 @pytest.mark.slow
@@ -364,6 +510,67 @@ def test_1e8_memmap_query_streams_with_bounded_memory(tmp_path):
         for g in folded[(folded >= w0) & (folded < w1)]:
             expect[g - w0] = True
         np.testing.assert_array_equal(bits, expect)
+
+
+@pytest.mark.slow
+def test_1e8_memmap_is_query_bounded_memory(tmp_path):
+    """An importance-weighted (method='is', scheme='sqrt') RT query over a
+    1e8-record memmap ScoreStore runs at O(chunk) peak host memory: the
+    persistent sampling state is ≤ n / chunk_records entries per
+    (shard, scheme) — no per-record CDF or p(x) array ever exists — and the
+    query's peak-RSS delta stays far below the ~1.2 GB the dense state
+    would allocate. No `weight_schemes=()` escape hatch needed."""
+    import resource
+
+    n = 100_000_000
+    chunk = 4_000_000
+    store = ScoreStore(tmp_path / "big_is.scores", n, create=True)
+    rng = np.random.default_rng(2)
+    for off in range(0, n, chunk):
+        store.write(off, rng.random(chunk, dtype=np.float32))
+
+    engine = SelectionEngine([store], num_bins=4096, use_kernel=False,
+                             select_backend="ref", chunk_records=chunk,
+                             workers=2)
+    assert engine._flat is None
+    # persistent hierarchical state: chunk-level only
+    assert len(engine._sampling_cache) == 1        # default ("sqrt",) warm
+    for states in engine._sampling_cache.values():
+        for st in states:
+            assert st.cdf.size <= n // chunk
+    for cm in engine._chunk_masses:
+        assert cm.sizes.size <= n // chunk
+        assert int(cm.sizes.sum()) == n
+
+    def oracle_fn(idx):
+        return (store.scores[np.asarray(idx, np.int64)] > 0.9).astype(
+            np.float32)
+
+    rss0 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss   # KiB
+    q = SUPGQuery(target="recall", gamma=0.9, budget=3000, method="is",
+                  weight_scheme="sqrt")
+    sink = BitmaskStore(tmp_path / "big_is.bits")
+    sel = engine.run(jax.random.PRNGKey(5), oracle_fn, q, sink=sink)
+    rss1 = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    assert 0.0 < sel.tau < 1.0
+    # the dense path allocated 12 B/record (~1.2 GB) on first IS draw;
+    # the hierarchical draw streams O(chunk) transients only
+    assert (rss1 - rss0) * 1024 < 500 * 1024 * 1024, (rss0, rss1)
+
+    # exact count accounting, chunk by chunk, against the direct baseline
+    pos = sel.sampled_positive_global
+    folded = pos[np.asarray(store.scores[pos]) < sel.tau]
+    folded_per_chunk = np.bincount(folded // chunk, minlength=n // chunk)
+    popcount = np.asarray([bin(i).count("1") for i in range(256)], np.int64)
+    arr = sink._arr
+    total = 0
+    for ci, off in enumerate(range(0, n, chunk)):
+        expect = int(np.count_nonzero(
+            np.asarray(store.scores[off:off + chunk]) >= sel.tau))
+        got = int(popcount[arr[off // 8:(off + chunk) // 8]].sum())
+        assert got == expect + int(folded_per_chunk[ci]), (ci, got, expect)
+        total += got
+    assert sel.total_selected == total
 
 
 # -- equivalence: engine vs single-host exact path ---------------------------

@@ -79,3 +79,49 @@ def test_uniform_sample_shape_and_m(n, s):
     assert ws.indices.shape == (s,)
     assert np.all(np.asarray(ws.indices) < n)
     np.testing.assert_allclose(np.asarray(ws.m), 1.0)
+
+
+# -- hierarchical chunk-mass primitives --------------------------------------
+
+def test_chunk_raw_masses_ignore_sentinels():
+    rng = np.random.default_rng(7)
+    scores = rng.random(5000).astype(np.float32)
+    scores[::7] = -1.0                         # unscored sentinel
+    s_sqrt, s_a = sampling.chunk_raw_masses(scores)
+    a = np.clip(scores, 0.0, 1.0)              # sentinel clips to 0 raw mass
+    assert s_sqrt == pytest.approx(float(np.sum(np.sqrt(a), dtype=np.float64)))
+    assert s_a == pytest.approx(float(np.sum(a, dtype=np.float64)))
+
+
+def test_defensive_chunk_mass_is_sum_of_record_probs():
+    """A chunk's defensive mass from the cached raw sums must equal the sum
+    of its records' p(x) — the identity that makes the hierarchical draw
+    reproduce the dense defensive mixture exactly."""
+    rng = np.random.default_rng(8)
+    n_total, kappa = 20_000, 0.1
+    scores = rng.beta(0.3, 1.0, n_total).astype(np.float32)
+    z = float(np.sum(np.sqrt(scores), dtype=np.float64))
+    chunks = np.array_split(scores, 7)
+    sizes = np.asarray([c.shape[0] for c in chunks], np.int64)
+    raws = np.asarray([sampling.chunk_raw_masses(c)[0] for c in chunks])
+    masses = sampling.defensive_chunk_mass(raws, sizes, z, kappa, n_total)
+    for c, m in zip(chunks, masses):
+        p = sampling.defensive_probs(c, "sqrt", z, kappa, n_total)
+        assert float(np.sum(p, dtype=np.float64)) == pytest.approx(m,
+                                                                   rel=1e-5)
+    # all chunk masses together carry the whole defensive mixture
+    assert float(masses.sum()) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_defensive_probs_match_dense_formula():
+    """defensive_probs must be bit-identical to the dense per-record
+    formula (float32), for both schemes."""
+    rng = np.random.default_rng(9)
+    scores = rng.random(4096).astype(np.float32)
+    n_total, kappa, z = 100_000, 0.1, 777.5
+    for scheme in ("sqrt", "prop"):
+        a = np.clip(scores, 0.0, 1.0)
+        raw = np.sqrt(a) if scheme == "sqrt" else a
+        dense = ((1.0 - kappa) * raw / z + kappa / n_total).astype(np.float32)
+        got = sampling.defensive_probs(scores, scheme, z, kappa, n_total)
+        np.testing.assert_array_equal(got, dense)

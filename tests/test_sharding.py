@@ -4,7 +4,7 @@ the expected dims."""
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_smoke_config
 from repro.launch import sharding as shardlib

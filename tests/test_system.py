@@ -10,8 +10,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import ModelConfig
-from repro.core import SUPGQuery, array_oracle, precision_of, recall_of, \
-    run_query
+from repro.core import SUPGQuery, array_oracle, recall_of, run_query
 from repro.data import synthetic
 from repro.launch import train as trainlib
 from repro.models import model
