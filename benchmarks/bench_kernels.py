@@ -194,6 +194,57 @@ def bench_engine_emission_workers():
               f"vs_w1={base / t_us:.2f}x")
 
 
+def bench_run_many_session():
+    """run_many batch execution: sequential (concurrency=1) vs the
+    QuerySession scheduler (concurrency=8) over one cached engine, with
+    the oracle-coalescing metric the session exists for: underlying
+    oracle invocations (batched fn calls) per query. Outputs are
+    bit-for-bit identical between the two paths; the session divides the
+    oracle's call count by funneling all in-flight plans' requests
+    through one BatchingOracle drain per round."""
+    from repro.core.engine import SelectionEngine
+    from repro.core.oracle import array_oracle
+    from repro.core.queries import SUPGQuery
+
+    rng = np.random.default_rng(11)
+    n = 1_000_000
+    scores = rng.beta(0.05, 1.0, n).astype(np.float32)
+    labels = (rng.random(n) < scores).astype(np.float32)
+    engine = SelectionEngine(np.array_split(scores, 8), num_bins=4096,
+                             use_kernel=False)
+    qs = [SUPGQuery(target="recall", gamma=0.9, delta=0.05, budget=1000,
+                    method="is") for _ in range(8)]
+    base = array_oracle(labels)
+
+    def timed(concurrency):
+        calls = [0]
+
+        def fn(idx):
+            calls[0] += 1
+            return base(idx)
+
+        engine.run_many(jax.random.PRNGKey(1), fn, qs,
+                        concurrency=concurrency)       # warmup
+        calls[0] = 0
+        times = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            engine.run_many(jax.random.PRNGKey(1), fn, qs,
+                            concurrency=concurrency)
+            times.append(time.perf_counter() - t0)
+        return min(times) * 1e6, calls[0] / 3 / len(qs)
+
+    t_seq, bpq_seq = timed(1)
+    t_sess, bpq_sess = timed(8)
+    print(f"run_many_8q_seq,{t_seq:.0f},concurrency=1;"
+          f"oracle_batches_per_query={bpq_seq:.3f}")
+    print(f"run_many_8q_session,{t_sess:.0f},concurrency=8;"
+          f"oracle_batches_per_query={bpq_sess:.3f};"
+          f"vs_seq={t_seq / t_sess:.2f}x")
+    print(f"oracle_batches_per_query,{bpq_sess:.3f},"
+          f"seq={bpq_seq:.3f};coalescing={bpq_seq / bpq_sess:.1f}x")
+
+
 def bench_draw_sample():
     """Hierarchical draw_sample throughput off the cached chunk-level
     state: 1e6 records in 8 shards split into ~64 chunks, 1e4 draws per
@@ -262,4 +313,4 @@ def bench_score_hist():
 ALL = [bench_flash_attention, bench_linear_scan, bench_score_hist,
        bench_threshold_select, bench_engine_selection,
        bench_engine_build_workers, bench_engine_emission_workers,
-       bench_draw_sample]
+       bench_draw_sample, bench_run_many_session]

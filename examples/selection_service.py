@@ -9,8 +9,11 @@
    ScoreStore (the production scoring plane in miniature).
 3. SELECT: build a SelectionEngine directly on the memory-mapped
    ScoreStore shard and serve a *batch* of RT / PT / JT SUPG queries
-   through `run_many` — one cached sketch + sampling state amortized
-   across the whole batch — verifying the statistical guarantees and
+   through `engine.session()` — one cached sketch + sampling state AND
+   one shared, batched labeling channel amortized across the whole batch
+   (concurrent query plans coalesce their oracle requests into
+   micro-batches; records labeled for one query answer the others from
+   the cache for free) — verifying the statistical guarantees and
    comparing against the U-NoCI baseline used by prior systems.
    The first query is served *streamed*: results reach the client
    incrementally through a SelectionStream (chunked shard-parallel
@@ -87,7 +90,7 @@ def main():
           f"mean A(x) pos={scores[truth].mean():.3f} "
           f"neg={scores[~truth].mean():.3f}")
 
-    print("[3/3] batched SUPG queries via SelectionEngine.run_many "
+    print("[3/3] batched SUPG queries via SelectionEngine.session "
           "(budget=1500, delta=5%)")
     # The engine consumes the memory-mapped store directly (zero-copy) and
     # builds its sketch + chunk-level sampling state exactly once for the
@@ -114,12 +117,23 @@ def main():
           f"tau={stream.result.tau:.4f} (counts held by the sink; "
           f"no mask materialized)")
 
+    # Serve the whole batch through one QuerySession: all five plans run
+    # concurrently and their oracle requests funnel into one BatchingOracle,
+    # so a record labeled for one query answers the others from the cache
+    # for free and the expensive oracle sees coalesced micro-batches.
     batch = [SUPGQuery(target=target, gamma=gamma, delta=0.05,
                        budget=1500, method=method)
              for target, gamma in (("recall", 0.9), ("precision", 0.75))
              for method in ("is", "noci")]
     batch.append(JointSUPGQuery(gamma_recall=0.9, stage_budget=1500))
-    results = engine.run_many(jax.random.PRNGKey(3), oracle, batch)
+    keys = jax.random.split(jax.random.PRNGKey(3), len(batch))
+    with engine.session(oracle, max_batch=4096) as sess:
+        handles = [sess.submit(q, key=k) for q, k in zip(batch, keys)]
+        results = [h.result() for h in handles]
+    print(f"  session served {len(batch)} queries with "
+          f"{sess.client.fn_calls} coalesced oracle batches "
+          f"({sess.client.records_labeled} records labeled once, "
+          f"shared across queries)")
     for q, sel in zip(batch, results):
         mask = np.concatenate(sel.masks)
         selected = np.nonzero(mask)[0]

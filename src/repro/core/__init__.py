@@ -2,13 +2,22 @@
 
 Public API:
   SUPGQuery / run_query / run_joint_query   query semantics (Section 3)
+  OracleClient / BatchingOracle             batched labeling channel +
+  BudgetLedger / as_oracle_client           per-query budget views (§4.1)
   sampling.*                                uniform & optimal importance samplers
   thresholds.*                              Algorithms 2-5 + U-NoCI baselines
   bounds.*                                  Lemma-1 confidence bounds
   binned.*                                  sketch-based distributed estimators
+
+The engine plane (SelectionEngine, QuerySession) lives in
+`repro.core.engine` — imported explicitly so `import repro.core` stays
+light (no kernel modules pulled in).
 """
 from repro.core import bounds, sampling, thresholds
-from repro.core.oracle import BudgetedOracle, BudgetExceededError, array_oracle
+from repro.core.oracle import (BatchingOracle, BudgetedOracle,
+                               BudgetExceededError, BudgetLedger,
+                               OracleClient, OracleRequest, Ticket,
+                               array_oracle, as_oracle_client)
 from repro.core.queries import (JointResult, JointSUPGQuery, QueryResult,
                                 SUPGQuery, precision_of, recall_of,
                                 run_joint_query, run_query)
@@ -16,6 +25,8 @@ from repro.core.queries import (JointResult, JointSUPGQuery, QueryResult,
 __all__ = [
     "bounds", "sampling", "thresholds",
     "BudgetedOracle", "BudgetExceededError", "array_oracle",
+    "BatchingOracle", "BudgetLedger", "OracleClient", "OracleRequest",
+    "Ticket", "as_oracle_client",
     "SUPGQuery", "QueryResult", "JointResult", "JointSUPGQuery",
     "run_query", "run_joint_query", "precision_of", "recall_of",
 ]

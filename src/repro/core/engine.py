@@ -71,10 +71,32 @@ is gone: persistent sampling state is ≤ n / chunk_records entries per
 so the `weight_schemes=()` escape hatch is no longer needed (the argument
 is kept as a cache pre-warm hint).
 
-`run_many` serves a *batch* of queries — SUPGQuery (RT/PT) and JointSUPGQuery
-(JT, Appendix A) — amortizing the sketch and the cached sampling state across
-the whole batch; this is the serving-plane entry point. Per-query sinks make
-it the streaming fan-out point for a service.
+Multi-query execution is built on *resumable query plans* and a shared
+labeling channel. The bodies of `run`/`run_joint` are generators
+(`_run_plan` / `_run_joint_plan`) that *yield* `OracleRequest`s instead of
+calling the oracle inline; everything between two yields is pure compute
+off the cached state. A single query drives its plan through a trivial
+trampoline (submit → drain → resume). `SelectionEngine.session()` returns a
+`QuerySession` that schedules N plans concurrently: each round it advances
+every in-flight plan to its next oracle request through the PR-3
+`pipeline.parallel_map` worker pool (the emission passes are embarrassingly
+parallel given the cached state), funnels all yielded requests through one
+`core.oracle.BatchingOracle`, drains once, and resumes the plans with their
+labels. The session therefore coalesces the expensive oracle across
+queries — one `fn` micro-batch can serve every in-flight query — while
+per-query `BudgetLedger` views keep ORACLE LIMIT enforcement per query
+(see `core/oracle.py` for the shared-cache budget semantics).
+
+`run_many` is a thin wrapper over a session (`concurrency=` knob) serving a
+*batch* of queries — SUPGQuery (RT/PT) and JointSUPGQuery (JT, Appendix A) —
+amortizing the sketch, the cached sampling state, *and the oracle channel*
+across the whole batch; this is the serving-plane entry point. Per-query
+sinks make it the streaming fan-out point for a service. Because plans are
+pure given (key, labels) and a pure oracle answers identically regardless
+of batching, `run_many` output (tau, counts, sink contents) is bit-for-bit
+identical at any `concurrency`; only the per-query `oracle_calls`
+*attribution* can shift when queries overlap (the shared cache answers
+later queries for free).
 
 Shards are host-local float32 arrays: plain np.ndarray, np.memmap, or
 `data.pipeline.ScoreStore` objects (consumed zero-copy through `.scores`, so
@@ -87,17 +109,30 @@ core/distributed.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+import os
+from typing import (Dict, Generator, List, Optional, Sequence, Tuple,
+                    Union)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import binned, sampling, thresholds
-from repro.core.oracle import BudgetedOracle
+from repro.core.oracle import (BudgetLedger, OracleClient, OracleRequest,
+                               as_oracle_client)
 from repro.core.queries import JointSUPGQuery, SUPGQuery
 from repro.data import pipeline
 from repro.kernels.threshold_select import ops as select_ops
+
+
+def _close_quietly(sink: "pipeline.SelectionSink") -> None:
+    """Best-effort close on an error path: the sink must come back
+    reusable (the double-open guard would otherwise wedge it), but the
+    original exception owns the outcome — a close failure is secondary."""
+    try:
+        sink.close()
+    except Exception:  # noqa: BLE001 — error path; original exc wins
+        pass
 
 
 class ShardedSelection:
@@ -396,25 +431,29 @@ class SelectionEngine:
                     self.shards[shard_id][local[seg]], np.float32)
         return out
 
-    # -- query ----------------------------------------------------------
+    # -- query plans ------------------------------------------------------
 
-    def run(self, key, oracle_fn: Callable, query: SUPGQuery, *,
-            sink: Optional[pipeline.SelectionSink] = None,
-            chunk_records: Optional[int] = None) -> ShardedSelection:
-        """Execute one RT/PT query, streaming the selection through `sink`.
+    def _run_plan(self, key, query: SUPGQuery, *,
+                  sink: Optional[pipeline.SelectionSink] = None,
+                  chunk_records: Optional[int] = None) \
+            -> Generator[OracleRequest, np.ndarray, ShardedSelection]:
+        """Resumable plan for one RT/PT query.
 
-        With no sink the selection lands in an in-memory `IndexSink`
-        (O(selected) host memory); pass a `BitmaskStore` for out-of-core
-        output or a `CallbackSink` to consume chunks as they are emitted.
+        Yields `OracleRequest`s wherever the old body called the oracle
+        inline and receives the label array back at the same point;
+        everything between yields is pure compute off the cached state, so
+        a scheduler may interleave any number of plans and answer their
+        requests from one coalesced labeling channel. Returns the
+        ShardedSelection via StopIteration.value.
         """
         key = jax.random.PRNGKey(0) if key is None else key
-        oracle = BudgetedOracle(oracle_fn, query.budget)
+        ledger = BudgetLedger(query.budget)
         s = query.budget
         if query.target == "recall":
             scheme = {"is": query.weight_scheme, "uniform": "uniform",
                       "noci": "uniform"}[query.method]
             idx, m = self.draw_sample(key, s, scheme)
-            o_s = oracle(idx)
+            o_s = yield OracleRequest(idx, ledger)
             a_s = self.score_at(idx)
             if query.method == "noci":
                 res = thresholds.tau_unoci_r(a_s, o_s, query.gamma)
@@ -426,14 +465,14 @@ class SelectionEngine:
             k0, k1 = jax.random.split(key)
             if query.method == "is" and query.two_stage:
                 idx0, m0 = self.draw_sample(k0, s // 2, query.weight_scheme)
-                o0 = oracle(idx0)
+                o0 = yield OracleRequest(idx0, ledger)
                 _, rank = thresholds.pt_stage1_nmatch(
                     o0, m0, self.n_total, query.gamma, query.delta)
                 tau_dp = float(binned.rank_to_threshold(self.sketch,
                                                         int(rank)))
                 # stage 2: uniform on D' via per-shard masked draws
                 idx1 = self._uniform_in_region(k1, s - s // 2, tau_dp)
-                o1 = oracle(idx1)
+                o1 = yield OracleRequest(idx1, ledger)
                 a1 = self.score_at(idx1)
                 res = thresholds.tau_ci_p(a1, o1, query.gamma,
                                           query.delta / 2.0,
@@ -442,7 +481,7 @@ class SelectionEngine:
                 scheme = ("uniform" if query.method in ("uniform", "noci")
                           else query.weight_scheme)
                 idx, m = self.draw_sample(k0, s, scheme)
-                o_s = oracle(idx)
+                o_s = yield OracleRequest(idx, ledger)
                 a_s = self.score_at(idx)
                 if query.method == "noci":
                     res = thresholds.tau_unoci_p(a_s, o_s, query.gamma)
@@ -453,11 +492,78 @@ class SelectionEngine:
                         min_step=query.min_step)
             tau = float(res.tau)
 
-        pos = oracle.labeled_positives()
-        return self._emit_selection(tau, pos, oracle.calls_used, sink,
+        pos = ledger.labeled_positives()
+        return self._emit_selection(tau, pos, ledger.charged, sink,
                                     chunk_records)
 
-    def run_joint(self, key, oracle_fn: Callable, query: JointSUPGQuery, *,
+    def _run_joint_plan(self, key, query: JointSUPGQuery, *,
+                        sink: Optional[pipeline.SelectionSink] = None,
+                        chunk_records: Optional[int] = None) \
+            -> Generator[OracleRequest, np.ndarray, ShardedSelection]:
+        """Resumable plan for one JT query (Appendix A): the RT sub-plan
+        (delegated via `yield from`, so its oracle requests ride the same
+        channel), then chunked verification requests over the candidate
+        set. The verification ledger is capped at n_total — unbounded by
+        design — and exists for `oracle_calls` attribution only."""
+        rt = SUPGQuery(target="recall", gamma=query.gamma_recall,
+                       delta=query.delta, budget=query.stage_budget,
+                       method=query.method)
+        cand = yield from self._run_plan(key, rt,
+                                         chunk_records=chunk_records)
+        vledger = BudgetLedger(self.n_total)
+        out = pipeline.IndexSink() if sink is None else sink
+        chunk = int(chunk_records or self.chunk_records)
+        sizes = [int(s.shape[0]) for s in self.shards]
+        out.open(sizes)
+        try:
+            for sh in range(len(self.shards)):
+                local = cand.indices(sh)
+                for start in range(0, local.size, chunk):
+                    seg = local[start:start + chunk]
+                    labels = yield OracleRequest(self.offsets[sh] + seg,
+                                                 vledger)
+                    out.emit(sh, seg[labels > 0.5])
+        except BaseException:
+            # Failed (or abandoned — GeneratorExit) mid-verification:
+            # release the sink so sequential reuse still works; its
+            # partial contents are owned by the raised error.
+            _close_quietly(out)
+            raise
+        counts = out.close()
+        return ShardedSelection(
+            tau=cand.tau,
+            oracle_calls=cand.oracle_calls + vledger.charged,
+            sampled_positive_global=cand.sampled_positive_global,
+            sink=out, shard_sizes=sizes, counts=counts)
+
+    def _plan_for(self, key, query, *, sink=None, chunk_records=None):
+        if isinstance(query, JointSUPGQuery):
+            return self._run_joint_plan(key, query, sink=sink,
+                                        chunk_records=chunk_records)
+        return self._run_plan(key, query, sink=sink,
+                              chunk_records=chunk_records)
+
+    # -- query entry points -----------------------------------------------
+
+    def run(self, key, oracle_fn, query: SUPGQuery, *,
+            sink: Optional[pipeline.SelectionSink] = None,
+            chunk_records: Optional[int] = None) -> ShardedSelection:
+        """Execute one RT/PT query, streaming the selection through `sink`.
+
+        `oracle_fn` is a plain ``indices -> labels`` callable (adapted
+        into a private labeling channel — exactly the historical
+        per-query-budget semantics) or an `OracleClient` such as a shared
+        `BatchingOracle`, in which case its label cache carries over.
+        With no sink the selection lands in an in-memory `IndexSink`
+        (O(selected) host memory); pass a `BitmaskStore` for out-of-core
+        output or a `CallbackSink` to consume chunks as they are emitted.
+        """
+        return _drive_plan(
+            self._run_plan(key, query, sink=sink,
+                           chunk_records=chunk_records),
+            as_oracle_client(oracle_fn))
+
+    def run_joint(self, key, oracle_fn, query: JointSUPGQuery, *,
                   sink: Optional[pipeline.SelectionSink] = None,
                   chunk_records: Optional[int] = None) -> ShardedSelection:
         """Engine-level JT query (Appendix A): RT stage at gamma_recall,
@@ -465,60 +571,78 @@ class SelectionEngine:
         streams into an internal IndexSink; verification then re-walks the
         candidate indices in chunks, emitting only oracle-verified positives
         into `sink` (precision exactly 1.0; oracle usage beyond the RT
-        stage is unbounded by design)."""
-        rt = SUPGQuery(target="recall", gamma=query.gamma_recall,
-                       delta=query.delta, budget=query.stage_budget,
-                       method=query.method)
-        cand = self.run(key, oracle_fn, rt, chunk_records=chunk_records)
-        oracle = BudgetedOracle(oracle_fn, budget=self.n_total)
-        out = pipeline.IndexSink() if sink is None else sink
-        chunk = int(chunk_records or self.chunk_records)
-        sizes = [int(s.shape[0]) for s in self.shards]
-        out.open(sizes)
-        for sh in range(len(self.shards)):
-            local = cand.indices(sh)
-            for start in range(0, local.size, chunk):
-                seg = local[start:start + chunk]
-                labels = oracle(self.offsets[sh] + seg)
-                out.emit(sh, seg[labels > 0.5])
-        counts = out.close()
-        return ShardedSelection(
-            tau=cand.tau,
-            oracle_calls=cand.oracle_calls + oracle.calls_used,
-            sampled_positive_global=cand.sampled_positive_global,
-            sink=out, shard_sizes=sizes, counts=counts)
+        stage is unbounded by design). Both stages ride one labeling
+        channel, so verification gets RT-stage labels from the cache for
+        free."""
+        return _drive_plan(
+            self._run_joint_plan(key, query, sink=sink,
+                                 chunk_records=chunk_records),
+            as_oracle_client(oracle_fn))
 
-    def run_many(self, key, oracle_fn: Callable,
+    def session(self, oracle_fn, *, concurrency: Optional[int] = None,
+                max_batch: Optional[int] = None) -> "QuerySession":
+        """Open a `QuerySession`: the multi-query scheduler + shared
+        batched-oracle channel. Use as a context manager::
+
+            with engine.session(oracle_fn, concurrency=8) as sess:
+                handles = [sess.submit(q, key=k) for q, k in work]
+                results = [h.result() for h in handles]
+
+        All in-flight plans' oracle requests funnel through one
+        `BatchingOracle` (unless `oracle_fn` is already an `OracleClient`,
+        which is then shared as-is), so overlapping samples are labeled
+        once and micro-batches span queries. `concurrency` caps in-flight
+        plans (default: unbounded — every submitted query joins the next
+        round); `max_batch` caps records per underlying oracle call.
+        """
+        return QuerySession(self, oracle_fn, concurrency=concurrency,
+                            max_batch=max_batch)
+
+    def run_many(self, key, oracle_fn,
                  queries: Sequence[Union[SUPGQuery, JointSUPGQuery]], *,
                  sinks: Optional[Sequence[
                      Optional[pipeline.SelectionSink]]] = None,
-                 chunk_records: Optional[int] = None) \
+                 chunk_records: Optional[int] = None,
+                 concurrency: Optional[int] = None) \
             -> List[ShardedSelection]:
-        """Serve a batch of RT / PT / JT queries off one cached state.
+        """Serve a batch of RT / PT / JT queries off one cached state —
+        a thin wrapper over `session()`.
 
         The sketch, shard masses, and per-scheme CDFs were built once at
         construction; each query only pays O(s) sampling + one streamed
-        O(n) emission pass. Budgets are accounted per query (each gets its
-        own BudgetedOracle), matching independent `run` calls semantically.
-        `sinks`, when given, supplies one sink per query (None entries fall
-        back to a fresh IndexSink) — the streaming fan-out point for a
-        service.
+        O(n) emission pass, and the whole batch shares one labeling
+        channel (overlapping samples are labeled once; oracle calls are
+        coalesced across queries into micro-batches). Budgets are enforced
+        per query via `BudgetLedger` views. `concurrency` caps in-flight
+        plans (default: the whole batch); output (tau, counts, sink
+        contents) is bit-for-bit identical at any concurrency for a pure
+        oracle. `sinks`, when given, supplies one sink per query (None
+        entries fall back to a fresh IndexSink) — the streaming fan-out
+        point for a service; one sink object cannot serve two queries
+        (their emissions would interleave).
         """
-        keys = jax.random.split(
-            jax.random.PRNGKey(0) if key is None else key, len(queries))
         if sinks is None:
             sinks = [None] * len(queries)
+        # Validate the sink list before any key splitting so a malformed
+        # call fails on the actual mistake, not a shape error downstream.
         if len(sinks) != len(queries):
-            raise ValueError("need exactly one sink (or None) per query")
-        out = []
-        for k, q, snk in zip(keys, queries, sinks):
-            if isinstance(q, JointSUPGQuery):
-                out.append(self.run_joint(k, oracle_fn, q, sink=snk,
-                                          chunk_records=chunk_records))
-            else:
-                out.append(self.run(k, oracle_fn, q, sink=snk,
-                                    chunk_records=chunk_records))
-        return out
+            raise ValueError(
+                f"need exactly one sink (or None) per query: got "
+                f"{len(sinks)} sinks for {len(queries)} queries")
+        live = [id(s) for s in sinks if s is not None]
+        if len(live) != len(set(live)):
+            raise ValueError(
+                "one sink object is shared by multiple queries; their "
+                "emissions would interleave — give each query its own sink")
+        if not len(queries):
+            return []
+        keys = jax.random.split(
+            jax.random.PRNGKey(0) if key is None else key, len(queries))
+        with self.session(oracle_fn, concurrency=concurrency) as sess:
+            handles = [sess.submit(q, key=k, sink=snk,
+                                   chunk_records=chunk_records)
+                       for k, q, snk in zip(keys, queries, sinks)]
+            return [h.result() for h in handles]
 
     # -- streaming emission ---------------------------------------------
 
@@ -546,14 +670,6 @@ class SelectionEngine:
         plan = (self.plan if chunk == self.chunk_records
                 else pipeline.ChunkPlan(sizes, chunk))
         sink.open(sizes)
-        if pos.size:
-            below = pos[self.score_at(pos) < tau]
-            if below.size:
-                sh_ids = np.searchsorted(self.offsets, below,
-                                         side="right") - 1
-                for shard_id in np.unique(sh_ids):
-                    loc = below[sh_ids == shard_id] - self.offsets[shard_id]
-                    sink.fold(int(shard_id), np.unique(loc))
 
         def emit_span(span):
             block = self.shards[span.shard_id][span.start:span.stop]
@@ -562,7 +678,22 @@ class SelectionEngine:
             if local.size:
                 sink.emit(span.shard_id, span.start + local)
 
-        pipeline.parallel_map(emit_span, plan, self.workers)
+        try:
+            if pos.size:
+                below = pos[self.score_at(pos) < tau]
+                if below.size:
+                    sh_ids = np.searchsorted(self.offsets, below,
+                                             side="right") - 1
+                    for shard_id in np.unique(sh_ids):
+                        loc = (below[sh_ids == shard_id]
+                               - self.offsets[shard_id])
+                        sink.fold(int(shard_id), np.unique(loc))
+            pipeline.parallel_map(emit_span, plan, self.workers)
+        except BaseException:
+            # Emission died (e.g. a CallbackSink consumer raised): release
+            # the sink so sequential reuse still works.
+            _close_quietly(sink)
+            raise
         counts = sink.close()
         return ShardedSelection(tau=float(tau), oracle_calls=oracle_calls,
                                 sampled_positive_global=pos, sink=sink,
@@ -640,3 +771,232 @@ class SelectionEngine:
 
         pipeline.parallel_map(resolve, work, self.workers)
         return out
+
+
+# ---------------------------------------------------------------------------
+# Query scheduling — the async multi-query execution plane
+# ---------------------------------------------------------------------------
+
+def _drive_plan(plan, client: OracleClient) -> ShardedSelection:
+    """Sequential trampoline: advance one plan to each OracleRequest,
+    answer it through the channel (submit + result, which drains), resume.
+    This is exactly the single-query execution path of `run`/`run_joint`.
+
+    A channel error is thrown *into* the plan at its yield point, not
+    raised from here directly: the suspended generator would otherwise
+    stay alive on the exception's traceback with its cleanup (sink
+    release) never run."""
+    send = None
+    while True:
+        try:
+            req = plan.send(send)
+        except StopIteration as done:
+            return done.value
+        try:
+            send = client.submit(req.indices, ledger=req.ledger).result()
+        except BaseException as err:  # noqa: BLE001 — rethrown in plan
+            try:
+                plan.throw(err)       # runs the plan's except/finally
+            except StopIteration as done:
+                return done.value     # plan absorbed the error gracefully
+            raise RuntimeError(
+                "plan yielded again after its oracle request failed")
+
+
+_START = object()       # inbox sentinel: plan not yet started
+
+
+class QueryHandle:
+    """Future for one query submitted to a `QuerySession`.
+
+    `result()` pumps the session's scheduler until this query's plan
+    completes, then returns its `ShardedSelection` — or raises the plan's
+    error (`BudgetExceededError` if this query's ledger was rejected in a
+    coalesced drain; other queries are unaffected).
+    """
+
+    def __init__(self, session: "QuerySession", query, sink):
+        self.query = query
+        self.sink = sink
+        self._session = session
+        self._result: Optional[ShardedSelection] = None
+        self._error: Optional[BaseException] = None
+        self._done = False
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def result(self) -> ShardedSelection:
+        if not self._done:
+            self._session._pump(until=self)
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+
+class QuerySession:
+    """Scheduler that drives N query plans concurrently over one shared,
+    batched labeling channel — `SelectionEngine.session()`'s return value.
+
+    Scheduling is round-based and deterministic: every round, all
+    in-flight plans advance to their next `OracleRequest` concurrently
+    through `pipeline.parallel_map` (each step is pure compute — sampling,
+    tau estimation, streamed emission — off the engine's cached state);
+    the driver then submits every yielded request to the shared
+    `BatchingOracle` *in submission order*, drains once, and resumes each
+    plan with its labels. One drain therefore coalesces the oracle across
+    every in-flight query, and the fixed submission order keeps charge
+    attribution reproducible at a given concurrency. Plans that finish
+    leave the round; queued plans join up to `concurrency` in submission
+    order. A plan whose ticket failed (e.g. `BudgetExceededError`) has the
+    error thrown into it at its yield point — that query's handle raises,
+    co-batched queries are untouched.
+
+    The scheduler itself runs on whichever thread pumps it (a
+    `handle.result()` call or the context-manager exit) — there is no
+    background thread, so results are deterministic functions of
+    (keys, queries, oracle, concurrency).
+    """
+
+    def __init__(self, engine: SelectionEngine, oracle_fn, *,
+                 concurrency: Optional[int] = None,
+                 max_batch: Optional[int] = None):
+        self.engine = engine
+        self.client = as_oracle_client(oracle_fn, max_batch=max_batch)
+        self.concurrency = (None if concurrency is None
+                            else max(1, int(concurrency)))
+        self._queued: List[Tuple[QueryHandle, Generator]] = []
+        self._active: List[List] = []    # [handle, plan, inbox]
+        self._closed = False
+
+    # -- submission -------------------------------------------------------
+
+    def submit(self, query, *, key=None,
+               sink: Optional[pipeline.SelectionSink] = None,
+               chunk_records: Optional[int] = None) -> QueryHandle:
+        """Enqueue one RT/PT/JT query; returns its `QueryHandle`.
+
+        `key` defaults to PRNGKey(0) (pass distinct keys for distinct
+        samples — `run_many` splits one key across its batch). The plan
+        starts when a scheduler round has a free slot (`concurrency`).
+        """
+        if self._closed:
+            raise RuntimeError("QuerySession is closed")
+        handle = QueryHandle(self, query, sink)
+        plan = self.engine._plan_for(key, query, sink=sink,
+                                     chunk_records=chunk_records)
+        self._queued.append((handle, plan))
+        return handle
+
+    def drain(self) -> None:
+        """Explicit barrier on the shared channel (pending tickets only —
+        plans advance when the scheduler is pumped)."""
+        self.client.drain()
+
+    # -- scheduler --------------------------------------------------------
+
+    def _pump(self, until: Optional[QueryHandle] = None) -> None:
+        """Run scheduler rounds until `until` (or everything) completes."""
+        while not (until._done if until is not None
+                   else not (self._active or self._queued)):
+            cap = self.concurrency or (len(self._active)
+                                       + len(self._queued))
+            while self._queued and len(self._active) < cap:
+                handle, plan = self._queued.pop(0)
+                self._active.append([handle, plan, _START])
+            if not self._active:
+                raise RuntimeError(
+                    "pumped a handle that is neither queued nor active")
+            self._round()
+
+    def _round(self) -> None:
+        """One scheduler round: step all plans, coalesce, drain, resume."""
+
+        def step(slot):
+            _, plan, inbox = slot
+            try:
+                if inbox is _START:
+                    return ("req", plan.send(None))
+                if isinstance(inbox, BaseException):
+                    return ("req", plan.throw(inbox))
+                return ("req", plan.send(inbox))
+            except StopIteration as done:
+                return ("done", done.value)
+            except BaseException as err:  # noqa: BLE001 — owned by handle
+                return ("err", err)
+
+        # Step-pool width: in-flight plans, the concurrency cap, and the
+        # machine (stepping 8 emission passes on 2 cores just thrashes).
+        # Thread count never changes outputs — steps land in their slots.
+        workers = min(len(self._active),
+                      self.concurrency or len(self._active),
+                      os.cpu_count() or 1)
+        outcomes = pipeline.parallel_map(step, self._active, workers)
+
+        survivors: List[List] = []
+        requests: List[Tuple[List, OracleRequest]] = []
+        for slot, (kind, value) in zip(self._active, outcomes):
+            handle = slot[0]
+            if kind == "done":
+                handle._result, handle._done = value, True
+            elif kind == "err":
+                handle._error, handle._done = value, True
+            else:
+                requests.append((slot, value))
+                survivors.append(slot)
+        # Commit the new round state *before* touching the channel: both
+        # submit (whose max_batch auto-drain can run fn) and the explicit
+        # drain may blow up on a broken oracle, and when they do, finished
+        # plans must already be gone from _active and every surviving slot
+        # must still get a definitive inbox below — never a stale one that
+        # would silently resume its plan with the previous round's payload.
+        self._active = survivors
+        pending: List[Tuple[List, object]] = []
+        drain_err: Optional[BaseException] = None
+        try:
+            for slot, req in requests:
+                pending.append((slot, self.client.submit(
+                    req.indices, ledger=req.ledger)))
+            self.client.drain()
+        except BaseException as err:  # noqa: BLE001 — surfaced below
+            drain_err = err
+        for slot, ticket in pending:
+            try:
+                # A poisoned drain marks every popped ticket with its
+                # error, so this resolves to labels or to the exception
+                # that the next round will throw into the plan.
+                slot[2] = ticket.result()
+            except BaseException as err:  # noqa: BLE001 — rethrown in plan
+                slot[2] = err
+        if drain_err is not None:
+            submitted = {id(slot) for slot, _ in pending}
+            for slot, _ in requests:
+                if id(slot) not in submitted:
+                    slot[2] = drain_err    # failed before this submit ran
+            raise drain_err
+
+    # -- lifecycle --------------------------------------------------------
+
+    def close(self, abandon: bool = False) -> None:
+        """Finish the session: pump every submitted query to completion
+        (unless `abandon`), then reject stragglers and close their plans."""
+        if self._closed:
+            return
+        if not abandon:
+            self._pump()
+        self._closed = True
+        leftovers = self._queued + [(s[0], s[1]) for s in self._active]
+        self._queued, self._active = [], []
+        for handle, plan in leftovers:
+            plan.close()
+            if not handle._done:
+                handle._error = RuntimeError("QuerySession abandoned")
+                handle._done = True
+
+    def __enter__(self) -> "QuerySession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close(abandon=exc_type is not None)
+        return False

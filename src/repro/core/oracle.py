@@ -1,4 +1,4 @@
-"""Oracle / proxy UDF interfaces and budget accounting.
+"""Oracle / proxy UDF interfaces, batched labeling, and budget accounting.
 
 The paper's operational model (Section 4.1): the user supplies
   * a proxy model A(x) in [0,1] — cheap, executed over the complete dataset
@@ -7,14 +7,62 @@ The paper's operational model (Section 4.1): the user supplies
   * an oracle predicate O(x) in {0,1} — expensive (human, or an oracle-grade
     model), rate-limited by the query's ORACLE LIMIT.
 
-`BudgetedOracle` wraps the user's callback with hard budget enforcement and
-deduplicated-call accounting (repeat draws of the same record — possible
-under with-replacement sampling — are answered from a cache and do NOT
-consume budget, matching how a batch labeling system would behave).
+Because the oracle is the rate-limited resource, a serving system's
+throughput is set by how well it *coalesces* oracle calls. This module
+therefore splits the old monolithic `BudgetedOracle` into three parts:
+
+`OracleClient` protocol — the batched labeling channel
+    ``submit(indices, ledger=...) -> Ticket`` enqueues a labeling request;
+    ``drain()`` is the explicit barrier that resolves everything pending.
+    Plans and sessions speak only this protocol, so the expensive callable
+    is invoked at the *channel's* cadence, not the caller's.
+
+`BatchingOracle` — the one real implementation
+    Coalesces pending requests from any number of concurrent queries into
+    micro-batches of at most ``max_batch`` unique records per underlying
+    ``fn`` call, backed by one process-wide label cache per client
+    instance. `SelectionEngine.session()` funnels every in-flight query of
+    a `QuerySession` through a single `BatchingOracle`, which is what makes
+    cross-query batching (and cross-query cache reuse) happen.
+
+`BudgetLedger` — per-query budget *views* over the shared channel
+    Budget semantics under a shared cache:
+
+      * a record is *charged* the moment the channel has to invoke ``fn``
+        for it, and it is charged to exactly one ledger — the earliest
+        submitted ticket (in `submit` order) that requested it;
+      * a record whose label is already cached (labeled earlier for any
+        query of the same client/session) is **free**: query B never pays
+        for what query A already bought. `ledger.charged` is therefore an
+        *attribution*, not a per-query isolation guarantee — at different
+        session concurrency levels the same query can be charged
+        differently, while its labels (and hence its selection) are
+        identical for any pure ``fn``;
+      * enforcement is still strictly per query: inside one coalesced
+        drain, a ticket whose charge would push its ledger past its
+        ORACLE LIMIT fails with `BudgetExceededError` *alone* — co-batched
+        tickets still resolve, and indices requested only by the failing
+        ticket are neither sent to ``fn`` nor cached (no label leaks from
+        an over-budget query);
+      * `ledger.labeled_positives()` sees only records the *owning query*
+        requested (Algorithm 1's R1 must not absorb other queries'
+        samples), returned sorted so results never depend on how batches
+        interleaved across queries.
+
+`as_oracle_client` adapts a plain ``indices -> labels`` callable into a
+private `BatchingOracle`, so every legacy entry point (`run`, `run_joint`,
+`run_many`, `queries.run_query`) keeps accepting bare callables unchanged.
+`BudgetedOracle` survives as the back-compat callable facade — one private
+client plus one ledger — with the original semantics: repeat draws of the
+same record (possible under with-replacement sampling) are answered from
+the cache and do NOT consume budget, matching how a batch labeling system
+behaves.
 """
 from __future__ import annotations
 
-from typing import Callable
+import dataclasses
+import threading
+from typing import Callable, List, Optional, Protocol, runtime_checkable
 
 import numpy as np
 
@@ -23,51 +71,369 @@ class BudgetExceededError(RuntimeError):
     """Raised when a query attempts to exceed its ORACLE LIMIT."""
 
 
-class BudgetedOracle:
-    def __init__(self, fn: Callable[[np.ndarray], np.ndarray], budget: int):
-        self._fn = fn
+# ---------------------------------------------------------------------------
+# Vectorized label cache
+# ---------------------------------------------------------------------------
+
+class _LabelCache:
+    """Sorted-array label cache with vectorized membership.
+
+    Replaces the per-element Python dict probe loop: lookups are one
+    `searchsorted` over the batch (a 1e6-index probe is a single numpy
+    pass), inserts are one merge. Keys are unique int64 record ids.
+    """
+
+    def __init__(self):
+        self._keys = np.empty(0, np.int64)
+        self._vals = np.empty(0, np.float32)
+
+    def __len__(self) -> int:
+        return int(self._keys.size)
+
+    def lookup(self, idx: np.ndarray):
+        """Vectorized probe: returns (labels, known_mask) aligned to idx.
+
+        Unknown positions carry 0.0 in `labels`; callers must consult
+        `known_mask` before trusting them.
+        """
+        idx = np.asarray(idx, np.int64)
+        if self._keys.size == 0:
+            return (np.zeros(idx.shape[0], np.float32),
+                    np.zeros(idx.shape[0], bool))
+        pos = np.searchsorted(self._keys, idx)
+        pos = np.minimum(pos, self._keys.size - 1)
+        known = self._keys[pos] == idx
+        out = np.where(known, self._vals[pos], 0.0).astype(np.float32)
+        return out, known
+
+    def missing(self, idx: np.ndarray) -> np.ndarray:
+        """Sorted unique indices from `idx` not present in the cache."""
+        uniq = np.unique(np.asarray(idx, np.int64))
+        if self._keys.size == 0:
+            return uniq
+        _, known = self.lookup(uniq)
+        return uniq[~known]
+
+    def insert(self, keys: np.ndarray, vals: np.ndarray) -> None:
+        """Merge new keys into the sorted store.
+
+        `keys` must be sorted, unique, and disjoint from the store (every
+        caller passes `np.unique`/`missing()` output). Both sides being
+        sorted, this is a linear two-way merge — O(N + k), not the
+        O(N log N) re-sort that would make a long-lived session's drains
+        quadratic in cumulative cache size.
+        """
+        keys = np.asarray(keys, np.int64)
+        if keys.size == 0:
+            return
+        vals = np.asarray(vals, np.float32)
+        if self._keys.size == 0:
+            self._keys, self._vals = keys.copy(), vals.copy()
+            return
+        ins = np.searchsorted(self._keys, keys) + np.arange(keys.size)
+        out_k = np.empty(self._keys.size + keys.size, np.int64)
+        out_v = np.empty(out_k.size, np.float32)
+        out_k[ins], out_v[ins] = keys, vals
+        old = np.ones(out_k.size, bool)
+        old[ins] = False
+        out_k[old], out_v[old] = self._keys, self._vals
+        self._keys, self._vals = out_k, out_v
+
+    def positives(self) -> np.ndarray:
+        """Sorted indices with a positive cached label."""
+        return self._keys[self._vals > 0.5].copy()
+
+
+# ---------------------------------------------------------------------------
+# Budget ledgers — per-query views over a shared channel
+# ---------------------------------------------------------------------------
+
+class BudgetLedger:
+    """One query's budget view of a (possibly shared) labeling channel.
+
+    Tracks how many `fn` labels were *attributed* to this query
+    (`charged`, capped at `budget` — see the module docstring for the
+    attribution rule under a shared cache) and which records this query
+    requested, so `labeled_positives()` reflects exactly this query's
+    sample — never co-batched queries' labels.
+    """
+
+    def __init__(self, budget: int):
         self.budget = int(budget)
-        self.calls_used = 0
-        self._cache: dict[int, float] = {}
+        self.charged = 0
+        self._seen = _LabelCache()   # records this query requested
 
     @property
     def remaining(self) -> int:
-        return self.budget - self.calls_used
+        return self.budget - self.charged
+
+    def charge(self, k: int) -> None:
+        if self.charged + k > self.budget:
+            raise BudgetExceededError(
+                f"oracle budget {self.budget} exceeded: "
+                f"{self.charged} used, {k} requested")
+        self.charged += int(k)
+
+    def record(self, idx: np.ndarray, labels: np.ndarray) -> None:
+        """Attach resolved labels for records this query requested."""
+        idx = np.asarray(idx, np.int64)
+        uniq, first = np.unique(idx, return_index=True)
+        _, known = self._seen.lookup(uniq)
+        if not known.all():
+            self._seen.insert(uniq[~known],
+                              np.asarray(labels, np.float32)[first[~known]])
+
+    def labeled_positives(self) -> np.ndarray:
+        """Sorted positive-labeled records among this query's requests —
+        the R1 component of Algorithm 1. Sorted by construction so the
+        result is independent of batch interleaving across queries."""
+        return self._seen.positives()
+
+
+@dataclasses.dataclass
+class OracleRequest:
+    """What a query plan yields when it needs labels: a batch of record
+    indices plus the ledger the resulting charges belong to. `ledger=None`
+    requests uncapped, unattributed labeling (used nowhere by the built-in
+    plans; JT verification carries an explicit n_total-capped ledger)."""
+    indices: np.ndarray
+    ledger: Optional[BudgetLedger] = None
+
+
+# ---------------------------------------------------------------------------
+# The batched labeling channel
+# ---------------------------------------------------------------------------
+
+class Ticket:
+    """Handle for one submitted labeling request. `result()` blocks the
+    logical exchange: it drains the owning channel if the ticket is still
+    pending, then returns labels aligned to the submitted indices (or
+    raises this ticket's error — e.g. `BudgetExceededError` when the
+    coalesced drain rejected this query's charge)."""
+
+    __slots__ = ("indices", "ledger", "_owner", "_labels", "_error", "_done")
+
+    def __init__(self, owner: "BatchingOracle", indices: np.ndarray,
+                 ledger: Optional[BudgetLedger]):
+        self._owner = owner
+        self.indices = indices
+        self.ledger = ledger
+        self._labels: Optional[np.ndarray] = None
+        self._error: Optional[BaseException] = None
+        self._done = False
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def result(self) -> np.ndarray:
+        if not self._done:
+            self._owner.drain()
+        if self._error is not None:
+            raise self._error
+        if not self._done:
+            # Never hand back labels for a ticket a drain dropped.
+            raise RuntimeError("ticket unresolved after drain")
+        return self._labels
+
+
+@runtime_checkable
+class OracleClient(Protocol):
+    """The batched labeling channel protocol query plans are driven over."""
+
+    def submit(self, indices,
+               ledger: Optional[BudgetLedger] = None) -> Ticket:
+        """Enqueue a labeling request; resolved at the next drain."""
+        ...
+
+    def drain(self) -> None:
+        """Barrier: resolve every pending ticket."""
+        ...
+
+
+class BatchingOracle:
+    """`OracleClient` that coalesces concurrent queries' requests into
+    micro-batches over one shared label cache.
+
+    `submit` only enqueues (auto-draining once the pending *new-to-cache*
+    record count reaches `max_batch`); `drain` is the explicit barrier:
+    it walks pending tickets in submission order, attributes each
+    new-to-cache record to the earliest ticket requesting it, enforces
+    each ledger's budget over its attributed records (a failing ticket
+    errors alone; its exclusive records are dropped from the batch and
+    never cached), then invokes ``fn`` on the surviving unique records in
+    sorted micro-batches of at most `max_batch`.
+
+    `fn_calls` / `records_labeled` count underlying oracle invocations and
+    labeled records — the serving-side metrics a session exists to
+    minimize. Thread-safe: `submit` and `drain` serialize on one lock
+    (drain runs ``fn`` while holding it, so concurrent submitters observe
+    either the pre- or post-drain cache, never a partial one).
+    """
+
+    def __init__(self, fn: Callable[[np.ndarray], np.ndarray],
+                 max_batch: Optional[int] = None):
+        if max_batch is not None and max_batch <= 0:
+            raise ValueError("max_batch must be positive")
+        self._fn = fn
+        self.max_batch = max_batch
+        self._cache = _LabelCache()
+        self._pending: List[Ticket] = []
+        self._pending_new = 0
+        self._lock = threading.RLock()
+        self.fn_calls = 0
+        self.records_labeled = 0
+
+    @property
+    def cache_size(self) -> int:
+        return len(self._cache)
+
+    def submit(self, indices,
+               ledger: Optional[BudgetLedger] = None) -> Ticket:
+        idx = np.asarray(indices, np.int64).reshape(-1)
+        with self._lock:
+            t = Ticket(self, idx, ledger)
+            self._pending.append(t)
+            # The new-to-cache probe exists only to arm the auto-drain
+            # threshold; without a max_batch cap it would be pure waste
+            # (drain recomputes the missing sets anyway).
+            if self.max_batch is not None:
+                self._pending_new += int(self._cache.missing(idx).size)
+                if self._pending_new >= self.max_batch:
+                    self._drain_locked()
+            return t
+
+    def drain(self) -> None:
+        with self._lock:
+            self._drain_locked()
+
+    def _drain_locked(self) -> None:
+        tickets, self._pending = self._pending, []
+        self._pending_new = 0
+        if not tickets:
+            return
+        try:
+            self._resolve(tickets)
+        except BaseException as err:
+            # Poisoned drain: every popped ticket must leave resolved —
+            # the ones the failure skipped carry the failure itself, so a
+            # later result() raises instead of returning stale labels
+            # (already-cached earlier micro-batches stay; they were
+            # labeled correctly).
+            for t in tickets:
+                if not t._done:
+                    t._error, t._done = err, True
+            raise
+
+    def _resolve(self, tickets: List[Ticket]) -> None:
+        # 1. attribution + enforcement, in submission order: each record
+        #    not in the cache is claimed by the earliest ticket requesting
+        #    it; a ticket whose claims would blow its ledger fails alone
+        #    and its exclusive claims are released (later tickets may
+        #    re-claim them).
+        claimed = np.empty(0, np.int64)          # sorted union of claims
+        claims: List = []                        # (ticket, its new records)
+        drain_charge: dict = {}                  # ledger -> pending charge
+        for t in tickets:
+            new = self._cache.missing(t.indices)
+            if claimed.size:
+                new = new[~np.isin(new, claimed)]
+            if t.ledger is not None:
+                pend = drain_charge.get(id(t.ledger), 0)
+                if t.ledger.charged + pend + new.size > t.ledger.budget:
+                    t._error = BudgetExceededError(
+                        f"oracle budget {t.ledger.budget} exceeded: "
+                        f"{t.ledger.charged + pend} used, "
+                        f"{new.size} requested in coalesced batch")
+                    t._done = True
+                    continue
+                drain_charge[id(t.ledger)] = pend + new.size
+            claims.append((t, new))
+            claimed = np.union1d(claimed, new)
+        # 2. label the surviving union in sorted micro-batches <= max_batch,
+        #    charging each ledger the moment fn is invoked for its claims:
+        #    if a later micro-batch fails, the records already labeled
+        #    (and cached) stay paid for — real oracle usage can never
+        #    exceed the sum of what the ledgers were charged.
+        step = self.max_batch or max(int(claimed.size), 1)
+        for start in range(0, int(claimed.size), step):
+            chunk = claimed[start:start + step]
+            labels = np.asarray(self._fn(chunk), np.float32).reshape(-1)
+            if labels.shape[0] != chunk.shape[0]:
+                raise ValueError("oracle returned wrong number of labels")
+            self.fn_calls += 1
+            self.records_labeled += int(chunk.size)
+            self._cache.insert(chunk, labels)
+            for t, new in claims:
+                if t.ledger is not None and new.size:
+                    lo = np.searchsorted(new, chunk[0])
+                    hi = np.searchsorted(new, chunk[-1], side="right")
+                    if hi > lo:
+                        t.ledger.charge(hi - lo)
+        # 3. resolve (charges landed per micro-batch above).
+        for t, new in claims:
+            labels, known = self._cache.lookup(t.indices)
+            assert known.all()
+            if t.ledger is not None:
+                t.ledger.record(t.indices, labels)
+            t._labels, t._done = labels, True
+
+
+def as_oracle_client(oracle,
+                     max_batch: Optional[int] = None) -> OracleClient:
+    """Adapter: pass `OracleClient`s through, wrap plain ``indices ->
+    labels`` callables in a private `BatchingOracle` — the shim that keeps
+    bare callables working across `run`, `run_joint`, `run_many`,
+    `queries.run_query`, and `SelectionEngine.session()`."""
+    if isinstance(oracle, OracleClient):
+        return oracle
+    if callable(oracle):
+        return BatchingOracle(oracle, max_batch=max_batch)
+    raise TypeError(
+        f"oracle must be an OracleClient or an indices->labels callable, "
+        f"got {type(oracle).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Back-compat facade
+# ---------------------------------------------------------------------------
+
+class BudgetedOracle:
+    """Callable facade with the original single-query semantics: one
+    private `BatchingOracle` channel plus one `BudgetLedger`.
+
+    Each `__call__` is a submit + drain exchange, so behavior matches the
+    historical class — hard budget enforcement, dedup accounting (repeat
+    draws of the same record are answered from the cache and do NOT
+    consume budget) — but the cache probe is the vectorized `_LabelCache`
+    pass instead of a per-element dict loop, and `labeled_positives()` is
+    sorted (dict insertion order is not deterministic once batches
+    interleave across a session's queries).
+    """
+
+    def __init__(self, fn: Callable[[np.ndarray], np.ndarray], budget: int):
+        self._client = BatchingOracle(fn)
+        self.ledger = BudgetLedger(budget)
+
+    @property
+    def budget(self) -> int:
+        return self.ledger.budget
+
+    @property
+    def calls_used(self) -> int:
+        return self.ledger.charged
+
+    @property
+    def remaining(self) -> int:
+        return self.ledger.remaining
 
     def __call__(self, indices) -> np.ndarray:
         """Label a batch of record indices; returns float32 {0,1} labels."""
-        idx = np.asarray(indices).reshape(-1)
-        out = np.empty(idx.shape[0], np.float32)
-        missing_pos, missing_idx = [], []
-        for pos, i in enumerate(idx):
-            key = int(i)
-            if key in self._cache:
-                out[pos] = self._cache[key]
-            else:
-                missing_pos.append(pos)
-                missing_idx.append(key)
-        # Deduplicate new indices (with-replacement draws repeat records).
-        uniq = sorted(set(missing_idx))
-        if uniq:
-            if self.calls_used + len(uniq) > self.budget:
-                raise BudgetExceededError(
-                    f"oracle budget {self.budget} exceeded: "
-                    f"{self.calls_used} used, {len(uniq)} requested")
-            labels = np.asarray(self._fn(np.asarray(uniq, np.int64)),
-                                np.float32).reshape(-1)
-            if labels.shape[0] != len(uniq):
-                raise ValueError("oracle returned wrong number of labels")
-            self.calls_used += len(uniq)
-            lookup = dict(zip(uniq, labels))
-            self._cache.update(lookup)
-            for pos, key in zip(missing_pos, missing_idx):
-                out[pos] = self._cache[key]
-        return out
+        return self._client.submit(indices, ledger=self.ledger).result()
 
     def labeled_positives(self) -> np.ndarray:
-        """Indices labeled positive so far — the R1 component of Algorithm 1."""
-        return np.asarray(
-            [i for i, v in self._cache.items() if v > 0.5], np.int64)
+        """Sorted indices labeled positive so far — Algorithm 1's R1."""
+        return self.ledger.labeled_positives()
 
 
 def array_oracle(labels) -> Callable[[np.ndarray], np.ndarray]:

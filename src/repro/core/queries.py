@@ -24,7 +24,7 @@ import jax
 import numpy as np
 
 from repro.core import sampling, thresholds
-from repro.core.oracle import BudgetedOracle
+from repro.core.oracle import BudgetLedger, as_oracle_client
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,27 +70,34 @@ def run_query(key, scores, oracle_fn, query: SUPGQuery) -> QueryResult:
     """Execute a SUPG query against proxy scores and an oracle callback.
 
     scores:    (n,) float array of proxy scores A(x) for every record.
-    oracle_fn: callback indices -> {0,1} labels (wrapped with budget
-               enforcement here).
+    oracle_fn: callback indices -> {0,1} labels, or an
+               `oracle.OracleClient` (e.g. a shared `BatchingOracle`) —
+               either way requests ride the batched labeling channel via
+               `as_oracle_client`, with budget enforced through this
+               query's own `BudgetLedger` view.
     """
     scores = np.asarray(jax.device_get(scores), np.float32)
     n = scores.shape[0]
     # Normalize the key once so RT and PT accept key=None identically.
     key = jax.random.PRNGKey(0) if key is None else key
-    oracle = BudgetedOracle(oracle_fn, query.budget)
-    s = query.budget
+    client = as_oracle_client(oracle_fn)
+    ledger = BudgetLedger(query.budget)
 
+    def oracle(indices):
+        return client.submit(indices, ledger=ledger).result()
+
+    s = query.budget
     if query.target == "recall":
         res = _run_rt(key, scores, oracle, s, query)
     else:
         res = _run_pt(key, scores, oracle, s, query)
     tau, corrected = res
 
-    r1 = oracle.labeled_positives()
+    r1 = ledger.labeled_positives()
     r2 = np.nonzero(scores >= tau)[0]
     selected = np.union1d(r1, r2)
     return QueryResult(selected=selected, tau=float(tau),
-                       oracle_calls=oracle.calls_used,
+                       oracle_calls=ledger.charged,
                        corrected_target=float(corrected),
                        n_sampled_positives=int(r1.shape[0]))
 
@@ -198,14 +205,17 @@ def run_joint_query(key, scores, oracle_fn, gamma_recall, gamma_precision,
     scores_np = np.asarray(jax.device_get(scores), np.float32)
     q = SUPGQuery(target="recall", gamma=gamma_recall, delta=delta,
                   budget=stage_budget, method=method)
-    # RT stage with its own budget accounting.
-    rt_res = run_query(key, scores_np, oracle_fn, q)
-    # Stage 3: exhaustive filtering of the candidate set. The oracle has no
-    # budget cap here; reuse cached labels from the RT stage where possible.
-    oracle = BudgetedOracle(oracle_fn, budget=scores_np.shape[0])
-    labels = oracle(rt_res.selected)
+    # One labeling channel for both stages (also lets callers hand in an
+    # OracleClient directly). RT keeps its own budget accounting.
+    client = as_oracle_client(oracle_fn)
+    rt_res = run_query(key, scores_np, client, q)
+    # Stage 3: exhaustive filtering of the candidate set. No budget cap
+    # here (the ledger is capped at n for attribution only); candidates
+    # the RT stage already labeled are answered from the channel's cache.
+    ledger = BudgetLedger(scores_np.shape[0])
+    labels = client.submit(rt_res.selected, ledger=ledger).result()
     keep = rt_res.selected[labels > 0.5]
-    total_calls = rt_res.oracle_calls + oracle.calls_used
+    total_calls = rt_res.oracle_calls + ledger.charged
     return JointResult(selected=keep, oracle_calls=total_calls,
                        stage2_tau=rt_res.tau)
 

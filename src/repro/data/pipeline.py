@@ -262,9 +262,21 @@ class SelectionSink:
     `IndexSink` does with its per-shard chunk lists. With workers == 1 the
     legacy ordering (chunks ascending per shard, shards in order) still
     holds. `open`, `fold` and `close` are always driver-thread only.
+
+    One sink serves one query at a time: under a `QuerySession` (or any
+    concurrent `run_many` batch) each query opens and closes its own sink,
+    and `open` refuses a sink that is already open — two queries sharing a
+    sink object would silently interleave their emissions. A sink may be
+    *reused* sequentially (open after close), which resets its state.
     """
 
     def open(self, shard_sizes: Sequence[int]) -> None:
+        if getattr(self, "_is_open", False):
+            raise RuntimeError(
+                f"{type(self).__name__} is already open: one sink object "
+                "cannot serve two queries at once (their emissions would "
+                "interleave) — give each query its own sink")
+        self._is_open = True
         self.shard_sizes = [int(n) for n in shard_sizes]
         self.offsets = np.concatenate(
             [[0], np.cumsum(self.shard_sizes)]).astype(np.int64)
@@ -289,6 +301,7 @@ class SelectionSink:
 
     def close(self) -> np.ndarray:
         self._finalize()
+        self._is_open = False
         return self.counts.copy()
 
     @property

@@ -1,0 +1,250 @@
+"""Batched labeling channel: BatchingOracle coalescing, BudgetLedger
+views, per-query enforcement inside coalesced drains, the plain-callable
+adapter, and the vectorized BudgetedOracle facade."""
+import numpy as np
+import pytest
+
+from repro.core.oracle import (BatchingOracle, BudgetedOracle,
+                               BudgetExceededError, BudgetLedger,
+                               OracleClient, array_oracle, as_oracle_client)
+
+
+def _counting_oracle(labels):
+    """array_oracle plus a log of every underlying fn invocation."""
+    arr = np.asarray(labels, np.float32)
+    calls = []
+
+    def fn(indices):
+        idx = np.asarray(indices, np.int64)
+        calls.append(idx.copy())
+        return arr[idx]
+
+    return fn, calls
+
+
+# -- coalescing ---------------------------------------------------------------
+
+def test_drain_coalesces_tickets_into_one_fn_call():
+    labels = np.arange(100) % 2
+    fn, calls = _counting_oracle(labels)
+    client = BatchingOracle(fn)
+    la, lb = BudgetLedger(50), BudgetLedger(50)
+    ta = client.submit([3, 1, 4, 1, 5], ledger=la)
+    tb = client.submit([5, 9, 2, 6], ledger=lb)
+    client.drain()
+    np.testing.assert_array_equal(ta.result(), labels[[3, 1, 4, 1, 5]])
+    np.testing.assert_array_equal(tb.result(), labels[[5, 9, 2, 6]])
+    # one fn call for both queries; the shared record 5 labeled once,
+    # charged to the earlier ticket
+    assert len(calls) == 1 and client.fn_calls == 1
+    np.testing.assert_array_equal(calls[0], [1, 2, 3, 4, 5, 6, 9])
+    assert la.charged == 4 and lb.charged == 3
+    assert client.records_labeled == 7 == client.cache_size
+
+
+def test_cache_shared_across_queries_and_drains():
+    fn, calls = _counting_oracle(np.ones(50))
+    client = BatchingOracle(fn)
+    client.submit(np.arange(10), ledger=BudgetLedger(10)).result()
+    lb = BudgetLedger(5)
+    out = client.submit([2, 4, 6], ledger=lb).result()
+    np.testing.assert_array_equal(out, 1.0)
+    assert len(calls) == 1          # fully answered from the shared cache
+    assert lb.charged == 0          # free for the second query
+
+
+def test_max_batch_micro_batches_and_auto_drain():
+    fn, calls = _counting_oracle(np.zeros(1000))
+    client = BatchingOracle(fn, max_batch=8)
+    t = client.submit(np.arange(20), ledger=BudgetLedger(100))
+    # 20 pending new records >= max_batch triggered the submit-time drain
+    assert t.done
+    assert [c.size for c in calls] == [8, 8, 4]
+    # under max_batch nothing fires until the explicit barrier
+    t2 = client.submit([100, 101], ledger=BudgetLedger(10))
+    assert not t2.done and len(calls) == 3
+    client.drain()
+    assert t2.done and [c.size for c in calls] == [8, 8, 4, 2]
+
+
+def test_ticket_result_drains_implicitly():
+    fn, calls = _counting_oracle(np.ones(10))
+    client = BatchingOracle(fn)
+    t = client.submit([1, 2, 3])            # ledger-less: uncapped
+    assert not t.done and not calls
+    np.testing.assert_array_equal(t.result(), 1.0)
+    assert t.done and len(calls) == 1
+
+
+def test_oracle_wrong_label_count_poisons_drain():
+    client = BatchingOracle(lambda idx: np.zeros(len(idx) + 1))
+    t = client.submit([1, 2], ledger=BudgetLedger(10))
+    with pytest.raises(ValueError, match="wrong number"):
+        client.drain()
+    with pytest.raises(ValueError, match="wrong number"):
+        t.result()
+
+
+# -- per-query enforcement inside a coalesced drain ---------------------------
+
+def test_budget_enforced_mid_micro_batch_without_poisoning_cobatched():
+    """A coalesced batch that would push one query's ledger past its
+    ORACLE LIMIT must fail that query alone: the co-batched query still
+    resolves, the failing query is not charged, and the failing query's
+    exclusive records are neither labeled nor cached."""
+    fn, calls = _counting_oracle(np.ones(100))
+    client = BatchingOracle(fn)
+    la, lb = BudgetLedger(5), BudgetLedger(100)
+    ta = client.submit(np.arange(10), ledger=la)        # needs 10 > 5
+    tb = client.submit(np.arange(5, 15), ledger=lb)     # needs 10 <= 100
+    client.drain()
+    with pytest.raises(BudgetExceededError):
+        ta.result()
+    np.testing.assert_array_equal(tb.result(), 1.0)
+    assert la.charged == 0 and lb.charged == 10
+    # records 0..4 were exclusive to the over-budget ticket: never sent to
+    # fn, never cached — no label leaks out of a rejected query
+    assert len(calls) == 1
+    np.testing.assert_array_equal(calls[0], np.arange(5, 15))
+    lc = BudgetLedger(100)
+    client.submit(np.arange(5), ledger=lc).result()
+    assert lc.charged == 5          # still cost fn labels afterwards
+    assert len(calls) == 2
+
+
+def test_budget_cumulative_across_same_ledger_tickets_in_one_drain():
+    client = BatchingOracle(array_oracle(np.ones(100)))
+    ledger = BudgetLedger(10)
+    t1 = client.submit(np.arange(6), ledger=ledger)
+    t2 = client.submit(np.arange(6, 12), ledger=ledger)   # 6 + 6 > 10
+    client.drain()
+    t1.result()                                           # first fits
+    with pytest.raises(BudgetExceededError):
+        t2.result()
+    assert ledger.charged == 6
+
+
+def test_budget_boundary_exact_fit_allowed():
+    oracle = BudgetedOracle(array_oracle(np.zeros(20)), budget=10)
+    oracle(np.arange(10))                 # exactly the limit
+    assert oracle.calls_used == 10 and oracle.remaining == 0
+    oracle(np.arange(10))                 # cached: still free
+    with pytest.raises(BudgetExceededError):
+        oracle([11])
+
+
+# -- ledger views -------------------------------------------------------------
+
+def test_labeled_positives_per_query_view_not_session_wide():
+    """R1 must reflect only the owning query's sample even when another
+    query labeled far more positives through the same channel."""
+    labels = np.ones(100, np.float32)
+    client = BatchingOracle(array_oracle(labels))
+    la, lb = BudgetLedger(50), BudgetLedger(50)
+    ta = client.submit([7, 3, 3, 11], ledger=la)
+    tb = client.submit(np.arange(40, 80), ledger=lb)
+    client.drain()
+    ta.result(), tb.result()
+    np.testing.assert_array_equal(la.labeled_positives(), [3, 7, 11])
+    np.testing.assert_array_equal(lb.labeled_positives(), np.arange(40, 80))
+
+
+def test_labeled_positives_sorted_regression():
+    """Regression: positives used to come back in dict insertion order,
+    which stops being deterministic once batches interleave across a
+    session's queries — they are now sorted by contract."""
+    labels = np.zeros(100, np.float32)
+    labels[[2, 50, 97, 13]] = 1.0
+    oracle = BudgetedOracle(array_oracle(labels), budget=50)
+    oracle([97, 2])                       # insertion order: high then low
+    oracle([50, 13, 60, 61])
+    pos = oracle.labeled_positives()
+    np.testing.assert_array_equal(pos, [2, 13, 50, 97])   # sorted, exact
+    # and stable under interleaved resubmission of cached records
+    oracle([13, 97, 2])
+    np.testing.assert_array_equal(oracle.labeled_positives(),
+                                  [2, 13, 50, 97])
+
+
+# -- vectorized facade --------------------------------------------------------
+
+def test_budgeted_oracle_vectorized_1e6_batch():
+    """The per-element dict probe loop is gone: a 1e6-index batch resolves
+    through vectorized membership passes with the historical dedup
+    accounting (unique records charged once, repeats answered free)."""
+    rng = np.random.default_rng(0)
+    n = 2_000_000
+    labels = (rng.random(n) < 0.01).astype(np.float32)
+    fn, calls = _counting_oracle(labels)
+    oracle = BudgetedOracle(fn, budget=n)
+    idx = rng.integers(0, n, 1_000_000)
+    out = oracle(idx)
+    np.testing.assert_array_equal(out, labels[idx])
+    uniq = np.unique(idx)
+    assert oracle.calls_used == uniq.size        # dedup accounting
+    assert len(calls) == 1 and calls[0].size == uniq.size
+    # the repeat batch is a pure cache pass: no fn call, no budget burn
+    out2 = oracle(idx[::-1])
+    np.testing.assert_array_equal(out2, labels[idx[::-1]])
+    assert oracle.calls_used == uniq.size and len(calls) == 1
+    np.testing.assert_array_equal(
+        oracle.labeled_positives(), uniq[labels[uniq] > 0.5])
+
+
+# -- adapter ------------------------------------------------------------------
+
+def test_as_oracle_client_passthrough_and_wrap():
+    client = BatchingOracle(array_oracle(np.ones(5)))
+    assert as_oracle_client(client) is client
+    assert isinstance(client, OracleClient)
+    wrapped = as_oracle_client(array_oracle(np.ones(5)), max_batch=3)
+    assert isinstance(wrapped, BatchingOracle)
+    assert wrapped.max_batch == 3
+    with pytest.raises(TypeError):
+        as_oracle_client(42)
+
+
+def test_batching_oracle_rejects_bad_max_batch():
+    with pytest.raises(ValueError):
+        BatchingOracle(array_oracle(np.ones(5)), max_batch=0)
+
+
+def test_label_cache_interleaved_insert_order():
+    """The linear-merge insert must keep the store sorted across
+    interleaved key ranges arriving in separate drains."""
+    labels = np.arange(200, dtype=np.float32) % 7
+    oracle = BudgetedOracle(array_oracle(labels), budget=200)
+    oracle(np.arange(0, 200, 2))            # evens first
+    oracle(np.arange(1, 200, 2))            # odds interleave everywhere
+    mixed = np.asarray([0, 199, 57, 58, 3, 3, 100])
+    np.testing.assert_array_equal(oracle(mixed), labels[mixed])
+    assert oracle.calls_used == 200
+    np.testing.assert_array_equal(
+        oracle.labeled_positives(), np.nonzero(labels > 0.5)[0])
+
+
+def test_mid_drain_failure_charges_completed_micro_batches():
+    """Regression: charging used to happen only after *all* micro-batches
+    succeeded, so a failure on chunk k left chunks < k labeled and cached
+    but charged to nobody — cumulative real oracle usage could then
+    exceed every ledger's ORACLE LIMIT via free retry cache hits. Charges
+    now land per completed micro-batch."""
+    calls = [0]
+
+    def fn(idx):
+        calls[0] += 1
+        if calls[0] == 2:
+            raise IOError("down")
+        return np.zeros(len(idx), np.float32)
+
+    client = BatchingOracle(fn, max_batch=2)
+    ledger = BudgetLedger(10)
+    with pytest.raises(IOError):            # submit-time auto-drain fires
+        client.submit([1, 2, 3, 4, 5], ledger=ledger)
+    # chunk {1,2} was labeled (and cached) before the failure: it is paid
+    assert ledger.charged == 2 == client.records_labeled
+    # the retry pays only for what was never labeled
+    t = client.submit([1, 2, 3, 4, 5], ledger=ledger)
+    np.testing.assert_array_equal(t.result(), 0.0)
+    assert ledger.charged == 5              # total == unique records labeled
+    assert client.records_labeled == 5
