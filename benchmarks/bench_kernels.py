@@ -245,6 +245,88 @@ def bench_run_many_session():
           f"seq={bpq_seq:.3f};coalescing={bpq_seq / bpq_sess:.1f}x")
 
 
+def bench_run_many_session_latency():
+    """The session's reason to exist, measured at RPC timescales: every
+    underlying oracle invocation sleeps 1 ms (the paper's rate-limited
+    oracle model), with `max_batch=256` bounding records per round-trip.
+    Eight JT queries -- the most oracle-hungry type: an RT stage plus
+    exhaustive candidate verification -- run (a) sequentially, each with
+    its own private labeling channel (per-query execution without a
+    session; note run_many(concurrency=1) already shares the cache, so
+    the private-channel loop is the honest no-session baseline), and
+    (b) through one QuerySession. The shared label cache answers the
+    overlapping RT samples and the near-identical verification candidate
+    sets once, so the session needs a fraction of the round-trips; the
+    vs_seq speedup is the wall-clock value of that coalescing
+    (acceptance: >= 2x)."""
+    import time as _time
+
+    from repro.core.engine import SelectionEngine
+    from repro.core.oracle import BatchingOracle, array_oracle
+    from repro.core.queries import JointSUPGQuery
+
+    rng = np.random.default_rng(13)
+    n = 100_000
+    scores = rng.beta(0.05, 1.0, n).astype(np.float32)
+    labels = (rng.random(n) < scores).astype(np.float32)
+    # 10k-record engine slice: keeps the jax dispatch floor small enough
+    # that oracle round-trips, not plan compute, dominate both paths.
+    sl = slice(0, 10_000)
+    engine = SelectionEngine(np.array_split(scores[sl], 2), num_bins=256,
+                             use_kernel=False)
+    base = array_oracle(labels[sl])
+    qs = [JointSUPGQuery(gamma_recall=0.9, stage_budget=1000)
+          for _ in range(8)]
+    keys = jax.random.split(jax.random.PRNGKey(1), len(qs))
+    mb = 256
+
+    def instrumented():
+        calls, recs = [0], [0]
+
+        def fn(idx):
+            calls[0] += 1
+            recs[0] += len(idx)
+            _time.sleep(1e-3)               # simulated oracle RPC latency
+            return base(idx)
+
+        return fn, calls, recs
+
+    def timed(once, calls, recs):
+        once()                              # warmup
+        calls[0] = recs[0] = 0
+        times = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            once()
+            times.append(time.perf_counter() - t0)
+        return min(times) * 1e6, calls[0] / 3, recs[0] / 3
+
+    fn, calls, recs = instrumented()
+
+    def seq_once():
+        for k, q in zip(keys, qs):
+            engine.run_joint(k, BatchingOracle(fn, max_batch=mb), q)
+
+    t_seq, tr_seq, rc_seq = timed(seq_once, calls, recs)
+
+    fn2, calls2, recs2 = instrumented()
+
+    def sess_once():
+        with engine.session(fn2, max_batch=mb) as s:
+            handles = [s.submit(q, key=k) for q, k in zip(qs, keys)]
+            for h in handles:
+                h.result()
+
+    t_sess, tr_sess, rc_sess = timed(sess_once, calls2, recs2)
+    print(f"run_many_8q_seq_lat1ms,{t_seq:.0f},latency_ms=1;"
+          f"private_channels=8;trips={tr_seq:.1f};"
+          f"records_labeled={rc_seq:.0f}")
+    print(f"run_many_8q_session_lat1ms,{t_sess:.0f},latency_ms=1;"
+          f"shared_session=1;trips={tr_sess:.1f};"
+          f"records_labeled={rc_sess:.0f};"
+          f"vs_seq={t_seq / t_sess:.2f}x")
+
+
 def bench_draw_sample():
     """Hierarchical draw_sample throughput off the cached chunk-level
     state: 1e6 records in 8 shards split into ~64 chunks, 1e4 draws per
@@ -313,4 +395,5 @@ def bench_score_hist():
 ALL = [bench_flash_attention, bench_linear_scan, bench_score_hist,
        bench_threshold_select, bench_engine_selection,
        bench_engine_build_workers, bench_engine_emission_workers,
-       bench_draw_sample, bench_run_many_session]
+       bench_draw_sample, bench_run_many_session,
+       bench_run_many_session_latency]

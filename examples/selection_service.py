@@ -134,6 +134,17 @@ def main():
           f"{sess.client.fn_calls} coalesced oracle batches "
           f"({sess.client.records_labeled} records labeled once, "
           f"shared across queries)")
+    # Per-round overlap accounting from the double-buffered scheduler:
+    # drains ran on the channel's drain thread while the other cohort
+    # computed, and concurrent emission walks fused into shared passes.
+    st = sess.stats
+    print(f"  overlap: {st.rounds} rounds, {st.drains} async drains "
+          f"({st.drain_busy_s * 1e3:.1f} ms in flight, "
+          f"{st.drain_wait_s * 1e3:.1f} ms blocked, "
+          f"{st.overlap_hidden_s * 1e3:.1f} ms hidden under compute); "
+          f"emission fused {st.fused_walks} walks: "
+          f"{st.walk_spans} spans -> {st.fused_spans} "
+          f"({st.spans_saved} chunk touches saved)")
     for q, sel in zip(batch, results):
         mask = np.concatenate(sel.masks)
         selected = np.nonzero(mask)[0]

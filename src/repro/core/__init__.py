@@ -16,8 +16,8 @@ light (no kernel modules pulled in).
 from repro.core import bounds, sampling, thresholds
 from repro.core.oracle import (BatchingOracle, BudgetedOracle,
                                BudgetExceededError, BudgetLedger,
-                               OracleClient, OracleRequest, Ticket,
-                               array_oracle, as_oracle_client)
+                               DrainHandle, OracleClient, OracleRequest,
+                               Ticket, array_oracle, as_oracle_client)
 from repro.core.queries import (JointResult, JointSUPGQuery, QueryResult,
                                 SUPGQuery, precision_of, recall_of,
                                 run_joint_query, run_query)
@@ -25,8 +25,8 @@ from repro.core.queries import (JointResult, JointSUPGQuery, QueryResult,
 __all__ = [
     "bounds", "sampling", "thresholds",
     "BudgetedOracle", "BudgetExceededError", "array_oracle",
-    "BatchingOracle", "BudgetLedger", "OracleClient", "OracleRequest",
-    "Ticket", "as_oracle_client",
+    "BatchingOracle", "BudgetLedger", "DrainHandle", "OracleClient",
+    "OracleRequest", "Ticket", "as_oracle_client",
     "SUPGQuery", "QueryResult", "JointResult", "JointSUPGQuery",
     "run_query", "run_joint_query", "precision_of", "recall_of",
 ]

@@ -23,12 +23,17 @@ Construction (one chunked pass over the shards, ChunkPlan-driven):
 
 Every chunked walk — sketch construction, selection emission, the PT
 stage-2 region draw, and query-time chunk-draw resolution — iterates the
-same `data.pipeline.ChunkPlan` and runs through `pipeline.parallel_map`:
-with `workers > 1` a small thread pool drives the spans concurrently
-(memmap reads, the numpy threshold_select path and the float64 chunk
-reductions all release the GIL), with results written to preassigned
-slots so thread count never changes any output bit. Sinks carry the
-matching thread-safety contract (`SelectionSink` docstring).
+same `data.pipeline.ChunkPlan` and runs through the engine's persistent
+`pipeline.WorkerPool`: with `workers > 1` the long-lived pool drives the
+spans concurrently (memmap reads, the numpy threshold_select path and the
+float64 chunk reductions all release the GIL), with results written to
+preassigned slots so thread count never changes any output bit. The pool
+is built once per engine (thread spin-up is not paid per walk), sized to
+at most `os.cpu_count()` (requesting more is oversubscription — the clamp
+is logged once; `clamp_workers=False` opts out for tests that need real
+thread interleaving on small machines), and released by `engine.close()`
+or the engine's context manager. Sinks carry the matching thread-safety
+contract (`SelectionSink` docstring).
 
 Query execution (zero O(n) *state* per query):
 
@@ -73,19 +78,39 @@ is kept as a cache pre-warm hint).
 
 Multi-query execution is built on *resumable query plans* and a shared
 labeling channel. The bodies of `run`/`run_joint` are generators
-(`_run_plan` / `_run_joint_plan`) that *yield* `OracleRequest`s instead of
-calling the oracle inline; everything between two yields is pure compute
-off the cached state. A single query drives its plan through a trivial
-trampoline (submit → drain → resume). `SelectionEngine.session()` returns a
-`QuerySession` that schedules N plans concurrently: each round it advances
-every in-flight plan to its next oracle request through the PR-3
-`pipeline.parallel_map` worker pool (the emission passes are embarrassingly
-parallel given the cached state), funnels all yielded requests through one
-`core.oracle.BatchingOracle`, drains once, and resumes the plans with their
-labels. The session therefore coalesces the expensive oracle across
-queries — one `fn` micro-batch can serve every in-flight query — while
-per-query `BudgetLedger` views keep ORACLE LIMIT enforcement per query
-(see `core/oracle.py` for the shared-cache budget semantics).
+(`_run_plan` / `_run_joint_plan`) that *yield* `OracleRequest`s wherever
+the old bodies called the oracle inline, and yield a `pipeline.ChunkWalk`
+for their selection-emission pass; everything between two yields is pure
+compute off the cached state. A single query drives its plan through a
+trivial trampoline (submit → drain → resume, walks run on the engine
+pool). `SelectionEngine.session()` returns a `QuerySession` scheduling N
+plans concurrently with *double-buffered rounds*: in-flight plans are
+split into two cohorts, A and B, and the scheduler alternates turns —
+while cohort A's coalesced oracle drain is in flight on the channel's
+dedicated drain thread (`BatchingOracle.drain_async`), cohort B's pure
+plan steps (sampling, tau estimation, emission, `_uniform_in_region`
+walks) already run on the engine's worker pool::
+
+    driver   | step A₀ | step B₀ | step A₁ | step B₁ | step A₂ | ...
+    channel  |         |·drain A₀·|·drain B₀·|·drain A₁·|·drain B₁·|
+
+so oracle I/O and compute overlap instead of strictly alternating — the
+"expensive predicate is the scarce resource, everything else must overlap
+it" posture of the paper's rate-limited oracle model. All `ChunkWalk`s a
+cohort yields in one turn are fused into a single span list
+(`ChunkPlan.fuse`): eight concurrent queries' emission passes touch each
+shard chunk once, not eight times. At most one drain is ever in flight,
+a cohort is only stepped after its previous drain's tickets resolved, and
+the scheduler commits round state before any channel call — so results
+(tau / counts / sink contents) stay bit-for-bit equal to the sequential
+path at any worker count and overlap depth; a pure oracle answers
+identically regardless of batching, and only the per-query `oracle_calls`
+*attribution* can shift with concurrency. The session coalesces the
+expensive oracle across queries — one `fn` micro-batch can serve every
+in-flight query — while per-query `BudgetLedger` views keep ORACLE LIMIT
+enforcement per query (see `core/oracle.py` for the shared-cache budget
+semantics). Per-session overlap accounting lands in `SessionStats`
+(drain in-flight time vs driver wait time, fused vs raw span counts).
 
 `run_many` is a thin wrapper over a session (`concurrency=` knob) serving a
 *batch* of queries — SUPGQuery (RT/PT) and JointSUPGQuery (JT, Appendix A) —
@@ -109,7 +134,9 @@ core/distributed.py.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import os
+import time
 from typing import (Dict, Generator, List, Optional, Sequence, Tuple,
                     Union)
 
@@ -118,11 +145,38 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import binned, sampling, thresholds
-from repro.core.oracle import (BudgetLedger, OracleClient, OracleRequest,
-                               as_oracle_client)
+from repro.core.oracle import (BudgetLedger, DrainHandle, OracleClient,
+                               OracleRequest, as_oracle_client)
 from repro.core.queries import JointSUPGQuery, SUPGQuery
 from repro.data import pipeline
 from repro.kernels.threshold_select import ops as select_ops
+
+logger = logging.getLogger(__name__)
+
+_clamp_logged = False
+
+
+def _effective_workers(requested: Optional[int], clamp: bool) -> int:
+    """Resolve the engine's pool width. Requesting more threads than the
+    machine has cores is pure oversubscription for these GIL-releasing
+    numpy walks (contended cores run *slower* — see the w8 < w4 cold-build
+    regression in BENCH_PR4), so the default clamps to `os.cpu_count()`
+    and logs once. `clamp=False` keeps the literal request — tests that
+    exercise real thread interleaving on small machines need it."""
+    global _clamp_logged
+    workers = max(1, int(requested)) if requested else 1
+    if not clamp:
+        return workers
+    cpus = os.cpu_count() or 1
+    if workers > cpus:
+        if not _clamp_logged:
+            logger.info(
+                "clamping engine workers=%d to cpu_count=%d "
+                "(oversubscribing GIL-releasing chunk walks is a slowdown; "
+                "pass clamp_workers=False to override)", workers, cpus)
+            _clamp_logged = True
+        return cpus
+    return workers
 
 
 def _close_quietly(sink: "pipeline.SelectionSink") -> None:
@@ -229,7 +283,8 @@ class SelectionEngine:
                  cache_flat: Optional[bool] = None,
                  select_backend: Optional[str] = None,
                  chunk_records: Optional[int] = None,
-                 workers: Optional[int] = None):
+                 workers: Optional[int] = None,
+                 clamp_workers: bool = True):
         # ScoreStore (or anything exposing `.scores`) passes its memmap
         # through untouched; ndarray shards are viewed, not copied.
         raw_shards = [getattr(s, "scores", s) for s in shards]
@@ -254,7 +309,10 @@ class SelectionEngine:
         self.chunk_records = int(chunk_records or pipeline.CHUNK_RECORDS)
         self.select_backend = (select_ops.default_backend()
                                if select_backend is None else select_backend)
-        self.workers = max(1, int(workers)) if workers else 1
+        # One persistent pool per engine: thread spin-up is paid at most
+        # once (lazily, on the first threaded walk), not per chunk walk.
+        self.workers = _effective_workers(workers, clamp_workers)
+        self.pool = pipeline.WorkerPool(self.workers)
         self.plan = pipeline.ChunkPlan(
             [int(s.shape[0]) for s in self.shards], self.chunk_records)
         self._flat = (np.concatenate(
@@ -268,11 +326,11 @@ class SelectionEngine:
         #    materialize whole; the per-chunk masses become the persistent
         #    O(n / chunk_records) hierarchical sampling state.
         spans = list(self.plan)
-        stats = pipeline.parallel_map(
+        stats = self.pool.map(
             lambda sp: binned.chunk_sketch_stats(
                 self.shards[sp.shard_id][sp.start:sp.stop], num_bins,
                 use_kernel=use_kernel),
-            spans, self.workers)
+            spans)
         parts: List[List] = [[] for _ in self.shards]
         sums: List[List[Tuple[float, float, int]]] = [[] for _ in self.shards]
         for sp, (sk, s_sqrt, s_a) in zip(spans, stats):
@@ -307,6 +365,21 @@ class SelectionEngine:
             _ShardChunkState]] = {}
         for scheme in weight_schemes:
             self._sampling_state(scheme, self.kappa)
+
+    # -- lifecycle ------------------------------------------------------
+
+    def close(self) -> None:
+        """Release the engine's worker pool (joins its threads).
+        Idempotent. A closed engine still serves `workers == 1` queries
+        (the inline fast path owns no threads)."""
+        self.pool.close()
+
+    def __enter__(self) -> "SelectionEngine":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
     # -- cached state ---------------------------------------------------
 
@@ -406,7 +479,7 @@ class SelectionEngine:
             out_m[pos] = (1.0 / self.n_total) / np.maximum(
                 p[local], 1e-38)
 
-        pipeline.parallel_map(resolve, work, self.workers)
+        self.pool.map(resolve, work)
         return out_idx, out_m
 
     def score_at(self, global_idx) -> np.ndarray:
@@ -436,15 +509,18 @@ class SelectionEngine:
     def _run_plan(self, key, query: SUPGQuery, *,
                   sink: Optional[pipeline.SelectionSink] = None,
                   chunk_records: Optional[int] = None) \
-            -> Generator[OracleRequest, np.ndarray, ShardedSelection]:
+            -> Generator[object, Optional[np.ndarray], ShardedSelection]:
         """Resumable plan for one RT/PT query.
 
         Yields `OracleRequest`s wherever the old body called the oracle
-        inline and receives the label array back at the same point;
-        everything between yields is pure compute off the cached state, so
-        a scheduler may interleave any number of plans and answer their
-        requests from one coalesced labeling channel. Returns the
-        ShardedSelection via StopIteration.value.
+        inline and receives the label array back at the same point, and
+        yields one `pipeline.ChunkWalk` for the selection-emission pass
+        (resumed with None once its spans have run — a scheduler fuses
+        all in-flight plans' walks into one pass; `_drive_plan` runs it
+        directly). Everything between yields is pure compute off the
+        cached state, so a scheduler may interleave any number of plans
+        and answer their requests from one coalesced labeling channel.
+        Returns the ShardedSelection via StopIteration.value.
         """
         key = jax.random.PRNGKey(0) if key is None else key
         ledger = BudgetLedger(query.budget)
@@ -493,13 +569,22 @@ class SelectionEngine:
             tau = float(res.tau)
 
         pos = ledger.labeled_positives()
-        return self._emit_selection(tau, pos, ledger.charged, sink,
-                                    chunk_records)
+        walk, out_sink, finish = self._emission_walk(tau, pos, sink,
+                                                     chunk_records)
+        try:
+            yield walk
+        except BaseException:
+            # Emission died (a CallbackSink consumer raised, the walk was
+            # poisoned, or the plan was abandoned at this yield): release
+            # the sink so sequential reuse still works.
+            _close_quietly(out_sink)
+            raise
+        return finish(ledger.charged)
 
     def _run_joint_plan(self, key, query: JointSUPGQuery, *,
                         sink: Optional[pipeline.SelectionSink] = None,
                         chunk_records: Optional[int] = None) \
-            -> Generator[OracleRequest, np.ndarray, ShardedSelection]:
+            -> Generator[object, Optional[np.ndarray], ShardedSelection]:
         """Resumable plan for one JT query (Appendix A): the RT sub-plan
         (delegated via `yield from`, so its oracle requests ride the same
         channel), then chunked verification requests over the candidate
@@ -561,7 +646,7 @@ class SelectionEngine:
         return _drive_plan(
             self._run_plan(key, query, sink=sink,
                            chunk_records=chunk_records),
-            as_oracle_client(oracle_fn))
+            as_oracle_client(oracle_fn), self.pool)
 
     def run_joint(self, key, oracle_fn, query: JointSUPGQuery, *,
                   sink: Optional[pipeline.SelectionSink] = None,
@@ -577,7 +662,7 @@ class SelectionEngine:
         return _drive_plan(
             self._run_joint_plan(key, query, sink=sink,
                                  chunk_records=chunk_records),
-            as_oracle_client(oracle_fn))
+            as_oracle_client(oracle_fn), self.pool)
 
     def session(self, oracle_fn, *, concurrency: Optional[int] = None,
                 max_batch: Optional[int] = None) -> "QuerySession":
@@ -591,9 +676,14 @@ class SelectionEngine:
         All in-flight plans' oracle requests funnel through one
         `BatchingOracle` (unless `oracle_fn` is already an `OracleClient`,
         which is then shared as-is), so overlapping samples are labeled
-        once and micro-batches span queries. `concurrency` caps in-flight
-        plans (default: unbounded — every submitted query joins the next
-        round); `max_batch` caps records per underlying oracle call.
+        once and micro-batches span queries. Scheduling is double-buffered
+        (see the module docstring): one cohort's coalesced drain runs on
+        the channel's drain thread while the other cohort's plan steps run
+        on the engine's worker pool, and all of a round's emission walks
+        fuse into one chunk pass. `concurrency` caps in-flight plans
+        (default: unbounded — every submitted query joins the next round);
+        `max_batch` caps records per underlying oracle call. Overlap
+        accounting is on `session.stats` (a `SessionStats`).
         """
         return QuerySession(self, oracle_fn, concurrency=concurrency,
                             max_batch=max_batch)
@@ -646,23 +736,26 @@ class SelectionEngine:
 
     # -- streaming emission ---------------------------------------------
 
-    def _emit_selection(self, tau: float, pos: np.ndarray,
-                        oracle_calls: int,
-                        sink: Optional[pipeline.SelectionSink],
-                        chunk_records: Optional[int]) -> ShardedSelection:
-        """Stream {A >= tau} ∪ labeled-positives through a sink.
+    def _emission_walk(self, tau: float, pos: np.ndarray,
+                       sink: Optional[pipeline.SelectionSink],
+                       chunk_records: Optional[int]):
+        """Prepare the streamed {A >= tau} ∪ labeled-positives emission.
 
-        The ChunkPlan spans are walked through the fused threshold_select
-        pass — concurrently across the worker pool when workers > 1 (the
-        sink serializes its own consumption; see its thread-safety
-        contract) — so peak host memory is O(chunk) and per-shard counts
-        accumulate in the sink; no full-corpus boolean mask is ever
-        allocated. Labeled positives are folded as a sink-level merge of
-        the positives *below* tau (those at/above tau stream out of their
-        own chunks), keeping fold/emit disjoint and counts exact. Unscored
-        records (the -1 sentinel) are never emitted by the threshold pass;
-        an unscored labeled positive still folds in, exactly like the
-        materialized path selected it.
+        Opens the sink, folds the labeled positives *below* tau (those
+        at/above tau stream out of their own chunks — fold/emit stay
+        disjoint and counts exact), and returns ``(walk, sink, finish)``:
+        the `ChunkWalk` whose spans run the fused threshold_select pass,
+        the opened sink, and the closure that closes the sink and builds
+        the `ShardedSelection` once every span has run. Splitting the walk
+        from its bookkeeping is what lets a `QuerySession` fuse all
+        in-flight plans' emission passes into one span list per round.
+        The sink serializes its own consumption (see its thread-safety
+        contract), peak host memory is O(chunk), and no full-corpus
+        boolean mask is ever allocated. Unscored records (the -1 sentinel)
+        are never emitted by the threshold pass; an unscored labeled
+        positive still folds in, exactly like the materialized path
+        selected it. If the fold itself dies (e.g. a CallbackSink consumer
+        raised) the sink is released before the error propagates.
         """
         sink = pipeline.IndexSink() if sink is None else sink
         chunk = int(chunk_records or self.chunk_records)
@@ -670,14 +763,6 @@ class SelectionEngine:
         plan = (self.plan if chunk == self.chunk_records
                 else pipeline.ChunkPlan(sizes, chunk))
         sink.open(sizes)
-
-        def emit_span(span):
-            block = self.shards[span.shard_id][span.start:span.stop]
-            local = select_ops.threshold_select(
-                block, tau, backend=self.select_backend)
-            if local.size:
-                sink.emit(span.shard_id, span.start + local)
-
         try:
             if pos.size:
                 below = pos[self.score_at(pos) < tau]
@@ -688,16 +773,41 @@ class SelectionEngine:
                         loc = (below[sh_ids == shard_id]
                                - self.offsets[shard_id])
                         sink.fold(int(shard_id), np.unique(loc))
-            pipeline.parallel_map(emit_span, plan, self.workers)
         except BaseException:
-            # Emission died (e.g. a CallbackSink consumer raised): release
-            # the sink so sequential reuse still works.
             _close_quietly(sink)
             raise
-        counts = sink.close()
-        return ShardedSelection(tau=float(tau), oracle_calls=oracle_calls,
-                                sampled_positive_global=pos, sink=sink,
-                                shard_sizes=sizes, counts=counts)
+
+        def emit_span(span):
+            block = self.shards[span.shard_id][span.start:span.stop]
+            local = select_ops.threshold_select(
+                block, tau, backend=self.select_backend)
+            if local.size:
+                sink.emit(span.shard_id, span.start + local)
+
+        def finish(oracle_calls: int) -> ShardedSelection:
+            counts = sink.close()
+            return ShardedSelection(
+                tau=float(tau), oracle_calls=oracle_calls,
+                sampled_positive_global=pos, sink=sink,
+                shard_sizes=sizes, counts=counts)
+
+        return pipeline.ChunkWalk(plan, emit_span), sink, finish
+
+    def _emit_selection(self, tau: float, pos: np.ndarray,
+                        oracle_calls: int,
+                        sink: Optional[pipeline.SelectionSink],
+                        chunk_records: Optional[int]) -> ShardedSelection:
+        """Synchronous emission: `_emission_walk` run to completion on the
+        engine's pool — the non-scheduled path (and benches)."""
+        walk, out_sink, finish = self._emission_walk(tau, pos, sink,
+                                                     chunk_records)
+        err = pipeline.run_fused([walk], self.pool)[0]
+        if err is not None:
+            # Emission died (e.g. a CallbackSink consumer raised): release
+            # the sink so sequential reuse still works.
+            _close_quietly(out_sink)
+            raise err
+        return finish(oracle_calls)
 
     def _uniform_in_region(self, key, s, tau):
         """Uniform draws from {A >= tau} across shards, chunk-streamed.
@@ -729,7 +839,7 @@ class SelectionEngine:
                 self.shards[span.shard_id][span.start:span.stop], tau,
                 backend=self.select_backend).size
 
-        span_counts = pipeline.parallel_map(count_span, spans, self.workers)
+        span_counts = self.pool.map(count_span, spans)
         per_shard = [np.zeros(plan.num_chunks(sh), np.int64)
                      for sh in range(len(self.shards))]
         for span, c in zip(spans, span_counts):
@@ -769,7 +879,7 @@ class SelectionEngine:
                 backend=self.select_backend)
             out[pos] = self.offsets[sh] + start + region[ranks]
 
-        pipeline.parallel_map(resolve, work, self.workers)
+        self.pool.map(resolve, work)
         return out
 
 
@@ -777,13 +887,17 @@ class SelectionEngine:
 # Query scheduling — the async multi-query execution plane
 # ---------------------------------------------------------------------------
 
-def _drive_plan(plan, client: OracleClient) -> ShardedSelection:
-    """Sequential trampoline: advance one plan to each OracleRequest,
-    answer it through the channel (submit + result, which drains), resume.
-    This is exactly the single-query execution path of `run`/`run_joint`.
+def _drive_plan(plan, client: OracleClient,
+                pool: Optional[pipeline.WorkerPool] = None) \
+        -> ShardedSelection:
+    """Sequential trampoline: advance one plan to each yield point —
+    `OracleRequest`s are answered through the channel (submit + result,
+    which drains), `ChunkWalk`s run to completion on the engine pool —
+    then resume. This is exactly the single-query execution path of
+    `run`/`run_joint`.
 
-    A channel error is thrown *into* the plan at its yield point, not
-    raised from here directly: the suspended generator would otherwise
+    A channel or walk error is thrown *into* the plan at its yield point,
+    not raised from here directly: the suspended generator would otherwise
     stay alive on the exception's traceback with its cleanup (sink
     release) never run."""
     send = None
@@ -793,14 +907,21 @@ def _drive_plan(plan, client: OracleClient) -> ShardedSelection:
         except StopIteration as done:
             return done.value
         try:
-            send = client.submit(req.indices, ledger=req.ledger).result()
+            if isinstance(req, pipeline.ChunkWalk):
+                walk_err = pipeline.run_fused([req], pool)[0]
+                if walk_err is not None:
+                    raise walk_err
+                send = None
+            else:
+                send = client.submit(req.indices,
+                                     ledger=req.ledger).result()
         except BaseException as err:  # noqa: BLE001 — rethrown in plan
             try:
                 plan.throw(err)       # runs the plan's except/finally
             except StopIteration as done:
                 return done.value     # plan absorbed the error gracefully
             raise RuntimeError(
-                "plan yielded again after its oracle request failed")
+                "plan yielded again after its request failed")
 
 
 _START = object()       # inbox sentinel: plan not yet started
@@ -835,39 +956,92 @@ class QueryHandle:
         return self._result
 
 
+@dataclasses.dataclass
+class SessionStats:
+    """Per-session scheduler accounting — the observability surface the
+    double-buffered overlap is judged by.
+
+    `drain_busy_s` is total wall time coalesced drains were in flight on
+    the channel; `drain_wait_s` is how long the driver actually blocked
+    waiting for them. Their difference (`overlap_hidden_s`) is oracle
+    latency hidden under the other cohort's compute. `walk_spans` counts
+    chunk spans the round's emission walks would have cost run separately;
+    `fused_spans` is what the fused pass actually walked — the gap
+    (`spans_saved`) is data chunks touched once instead of k times."""
+
+    rounds: int = 0            # scheduler turns taken
+    plan_steps: int = 0        # generator resumptions
+    drains: int = 0            # coalesced drains launched
+    drain_busy_s: float = 0.0  # wall time drains spent in flight
+    drain_wait_s: float = 0.0  # driver time blocked awaiting drains
+    fused_walks: int = 0       # emission walks executed through fusion
+    walk_spans: int = 0        # spans those walks would cost unfused
+    fused_spans: int = 0       # spans the fused passes actually ran
+
+    @property
+    def overlap_hidden_s(self) -> float:
+        """Oracle in-flight time the driver never blocked on."""
+        return max(0.0, self.drain_busy_s - self.drain_wait_s)
+
+    @property
+    def spans_saved(self) -> int:
+        """Chunk touches eliminated by per-round walk fusion."""
+        return self.walk_spans - self.fused_spans
+
+
 class QuerySession:
     """Scheduler that drives N query plans concurrently over one shared,
     batched labeling channel — `SelectionEngine.session()`'s return value.
 
-    Scheduling is round-based and deterministic: every round, all
-    in-flight plans advance to their next `OracleRequest` concurrently
-    through `pipeline.parallel_map` (each step is pure compute — sampling,
-    tau estimation, streamed emission — off the engine's cached state);
-    the driver then submits every yielded request to the shared
-    `BatchingOracle` *in submission order*, drains once, and resumes each
-    plan with its labels. One drain therefore coalesces the oracle across
-    every in-flight query, and the fixed submission order keeps charge
-    attribution reproducible at a given concurrency. Plans that finish
-    leave the round; queued plans join up to `concurrency` in submission
-    order. A plan whose ticket failed (e.g. `BudgetExceededError`) has the
-    error thrown into it at its yield point — that query's handle raises,
-    co-batched queries are untouched.
+    Scheduling is *double-buffered* and deterministic: in-flight plans are
+    split across two cohorts that take strictly alternating turns. One
+    turn advances every plan of the current cohort to its next yield
+    through the engine's persistent `WorkerPool` (each step is pure
+    compute — sampling, tau estimation, emission — off the engine's
+    cached state; all `ChunkWalk`s the cohort yields are fused into one
+    span list, so k emission passes touch each shard chunk once), then
+    resolves the *other* cohort's in-flight drain, submits this cohort's
+    requests in submission order, and launches their coalesced drain
+    asynchronously (`BatchingOracle.drain_async`) before handing the turn
+    over. The drain is therefore in flight on the channel's dedicated
+    drain thread exactly while the other cohort computes. At most one
+    drain is ever outstanding, a cohort is stepped only after its own
+    drain's tickets resolved, and cohort state commits before any channel
+    call — so results are bit-for-bit the sequential path's at any worker
+    count and overlap depth, and the fixed submission order keeps charge
+    attribution reproducible at a given concurrency.
+
+    Plans that finish leave their cohort; queued plans join cohorts in
+    submission order, balanced so both cohorts carry work. A plan whose
+    ticket failed (e.g. `BudgetExceededError`) has the error thrown into
+    it at its yield point on its next turn — that query's handle raises,
+    co-batched queries are untouched; a poisoned drain reaches every
+    ticket it owned, so nothing fails silently.
 
     The scheduler itself runs on whichever thread pumps it (a
-    `handle.result()` call or the context-manager exit) — there is no
-    background thread, so results are deterministic functions of
-    (keys, queries, oracle, concurrency).
+    `handle.result()` call or the context-manager exit) — the only
+    background activity is the channel's drain thread, which never
+    touches plan or engine state, so results are deterministic functions
+    of (keys, queries, oracle, concurrency).
     """
 
     def __init__(self, engine: SelectionEngine, oracle_fn, *,
                  concurrency: Optional[int] = None,
                  max_batch: Optional[int] = None):
         self.engine = engine
+        self._owns_client = not isinstance(oracle_fn, OracleClient)
         self.client = as_oracle_client(oracle_fn, max_batch=max_batch)
         self.concurrency = (None if concurrency is None
                             else max(1, int(concurrency)))
+        self.stats = SessionStats()
         self._queued: List[Tuple[QueryHandle, Generator]] = []
-        self._active: List[List] = []    # [handle, plan, inbox]
+        # Two cohorts of slots [handle, plan, inbox]; _turn picks the one
+        # stepped next. _outstanding is the in-flight drain of the cohort
+        # whose turn just ended: (DrainHandle, [(slot, ticket), ...]).
+        self._bufs: List[List[List]] = [[], []]
+        self._turn = 0
+        self._outstanding: Optional[
+            Tuple[DrainHandle, List[Tuple[List, object]]]] = None
         self._closed = False
 
     # -- submission -------------------------------------------------------
@@ -879,7 +1053,8 @@ class QuerySession:
 
         `key` defaults to PRNGKey(0) (pass distinct keys for distinct
         samples — `run_many` splits one key across its batch). The plan
-        starts when a scheduler round has a free slot (`concurrency`).
+        starts when a scheduler turn has a free cohort slot
+        (`concurrency` caps the two cohorts' combined size).
         """
         if self._closed:
             raise RuntimeError("QuerySession is closed")
@@ -896,103 +1071,207 @@ class QuerySession:
 
     # -- scheduler --------------------------------------------------------
 
+    def _work_left(self) -> bool:
+        return bool(self._queued or self._bufs[0] or self._bufs[1]
+                    or self._outstanding is not None)
+
     def _pump(self, until: Optional[QueryHandle] = None) -> None:
-        """Run scheduler rounds until `until` (or everything) completes."""
+        """Run scheduler turns until `until` (or everything) completes."""
         while not (until._done if until is not None
-                   else not (self._active or self._queued)):
-            cap = self.concurrency or (len(self._active)
-                                       + len(self._queued))
-            while self._queued and len(self._active) < cap:
-                handle, plan = self._queued.pop(0)
-                self._active.append([handle, plan, _START])
-            if not self._active:
+                   else not self._work_left()):
+            if not self._work_left():
                 raise RuntimeError(
                     "pumped a handle that is neither queued nor active")
             self._round()
 
-    def _round(self) -> None:
-        """One scheduler round: step all plans, coalesce, drain, resume."""
+    def _admit(self, buf: List[List]) -> None:
+        """Move queued plans into `buf`, keeping the cohorts balanced:
+        each cohort is filled to at most half the concurrency cap, so a
+        full session always has a second cohort to compute under the
+        first one's drain."""
+        active = len(self._bufs[0]) + len(self._bufs[1])
+        cap = self.concurrency or (active + len(self._queued))
+        half = max(1, -(-cap // 2))
+        while self._queued and active < cap and len(buf) < half:
+            handle, plan = self._queued.pop(0)
+            buf.append([handle, plan, _START])
+            active += 1
 
-        def step(slot):
-            _, plan, inbox = slot
+    def _step_cohort(self, buf: List[List]) -> List[Tuple[str, object]]:
+        """Advance every slot of one cohort to its next `OracleRequest`
+        or completion. Slots pausing at `ChunkWalk` yields have their
+        walks fused (`ChunkPlan.fuse`) and run as one span pass on the
+        engine pool between micro-steps, then resume — so the cohort
+        leaves this call holding only oracle requests and results.
+        Thread count never changes outputs: steps land in their slots,
+        and walk errors go back into exactly the plan that owns them."""
+
+        def step(i):
+            _, plan, inbox = buf[i]
             try:
                 if inbox is _START:
-                    return ("req", plan.send(None))
-                if isinstance(inbox, BaseException):
-                    return ("req", plan.throw(inbox))
-                return ("req", plan.send(inbox))
+                    out = plan.send(None)
+                elif isinstance(inbox, BaseException):
+                    out = plan.throw(inbox)
+                else:
+                    out = plan.send(inbox)
             except StopIteration as done:
                 return ("done", done.value)
             except BaseException as err:  # noqa: BLE001 — owned by handle
                 return ("err", err)
+            if isinstance(out, pipeline.ChunkWalk):
+                return ("walk", out)
+            return ("req", out)
 
-        # Step-pool width: in-flight plans, the concurrency cap, and the
-        # machine (stepping 8 emission passes on 2 cores just thrashes).
-        # Thread count never changes outputs — steps land in their slots.
-        workers = min(len(self._active),
-                      self.concurrency or len(self._active),
-                      os.cpu_count() or 1)
-        outcomes = pipeline.parallel_map(step, self._active, workers)
+        outcomes: List[Optional[Tuple[str, object]]] = [None] * len(buf)
+        live = list(range(len(buf)))
+        while live:
+            self.stats.plan_steps += len(live)
+            stepped = self.engine.pool.map(step, live)
+            walkers: List[int] = []
+            for i, res in zip(live, stepped):
+                outcomes[i] = res
+                if res[0] == "walk":
+                    walkers.append(i)
+            if not walkers:
+                break
+            walks = [outcomes[i][1] for i in walkers]
+            geoms: Dict[Tuple, pipeline.ChunkPlan] = {}
+            for w in walks:
+                geoms.setdefault(w.plan.geometry, w.plan)
+            self.stats.fused_walks += len(walks)
+            self.stats.walk_spans += sum(
+                w.plan.total_chunks for w in walks)
+            self.stats.fused_spans += sum(
+                p.total_chunks for p in geoms.values())
+            errs = pipeline.run_fused(walks, self.engine.pool)
+            for i, err in zip(walkers, errs):
+                # None resumes the plan past its walk; an error is thrown
+                # into it (releasing its sink) on the re-step below.
+                buf[i][2] = err
+            live = walkers
+        return outcomes
 
-        survivors: List[List] = []
-        requests: List[Tuple[List, OracleRequest]] = []
-        for slot, (kind, value) in zip(self._active, outcomes):
-            handle = slot[0]
-            if kind == "done":
-                handle._result, handle._done = value, True
-            elif kind == "err":
-                handle._error, handle._done = value, True
-            else:
-                requests.append((slot, value))
-                survivors.append(slot)
-        # Commit the new round state *before* touching the channel: both
-        # submit (whose max_batch auto-drain can run fn) and the explicit
-        # drain may blow up on a broken oracle, and when they do, finished
-        # plans must already be gone from _active and every surviving slot
-        # must still get a definitive inbox below — never a stale one that
-        # would silently resume its plan with the previous round's payload.
-        self._active = survivors
-        pending: List[Tuple[List, object]] = []
-        drain_err: Optional[BaseException] = None
-        try:
-            for slot, req in requests:
-                pending.append((slot, self.client.submit(
-                    req.indices, ledger=req.ledger)))
-            self.client.drain()
-        except BaseException as err:  # noqa: BLE001 — surfaced below
-            drain_err = err
+    def _await_outstanding(self) -> None:
+        """Settle the in-flight drain (if any) and deliver its tickets'
+        labels — or its poison — into the owning cohort's inboxes."""
+        if self._outstanding is None:
+            return
+        handle, pending = self._outstanding
+        self._outstanding = None
+        t0 = time.perf_counter()
+        handle.wait()
+        self.stats.drain_wait_s += time.perf_counter() - t0
+        self.stats.drain_busy_s += handle.duration_s
         for slot, ticket in pending:
             try:
-                # A poisoned drain marks every popped ticket with its
-                # error, so this resolves to labels or to the exception
-                # that the next round will throw into the plan.
                 slot[2] = ticket.result()
             except BaseException as err:  # noqa: BLE001 — rethrown in plan
                 slot[2] = err
-        if drain_err is not None:
-            submitted = {id(slot) for slot, _ in pending}
-            for slot, _ in requests:
-                if id(slot) not in submitted:
-                    slot[2] = drain_err    # failed before this submit ran
-            raise drain_err
+
+    def _round(self) -> None:
+        """One scheduler turn: admit + step the current cohort (fusing
+        its walks), commit, resolve the other cohort's drain, then launch
+        this cohort's drain asynchronously and hand the turn over."""
+        cur = self._turn
+        buf = self._bufs[cur]
+        self._admit(buf)
+        self.stats.rounds += 1
+        requests: List[Tuple[List, OracleRequest]] = []
+        if buf:
+            # This is the compute that overlaps the other cohort's
+            # in-flight drain: the drain thread only touches the channel,
+            # the steps only touch engine state.
+            outcomes = self._step_cohort(buf)
+            survivors: List[List] = []
+            for slot, (kind, value) in zip(buf, outcomes):
+                handle = slot[0]
+                if kind == "done":
+                    handle._result, handle._done = value, True
+                elif kind == "err":
+                    handle._error, handle._done = value, True
+                else:
+                    requests.append((slot, value))
+                    survivors.append(slot)
+            # Commit the new cohort state *before* touching the channel:
+            # submit (whose max_batch auto-drain can run fn) may blow up
+            # on a broken oracle, and when it does, finished plans must
+            # already be gone and every surviving slot must still get a
+            # definitive inbox — never a stale one that would silently
+            # resume its plan with the previous turn's payload.
+            self._bufs[cur] = buf = survivors
+        # Resolve the other cohort's drain before submitting: submits
+        # would only block on the channel lock the drain holds anyway,
+        # and waiting here keeps drain_wait_s an honest overlap metric.
+        self._await_outstanding()
+        if requests:
+            pending: List[Tuple[List, object]] = []
+            try:
+                for slot, req in requests:
+                    pending.append((slot, self.client.submit(
+                        req.indices, ledger=req.ledger)))
+            except BaseException as err:  # noqa: BLE001 — into inboxes
+                # A submit-time auto-drain failed: its poison already
+                # marks every popped ticket; plans see the error at their
+                # next turn (loudly — the handles raise it), exactly like
+                # an async drain failure.
+                submitted = {id(slot) for slot, _ in pending}
+                for slot, _ in requests:
+                    if id(slot) not in submitted:
+                        slot[2] = err     # failed before this submit ran
+                for slot, ticket in pending:
+                    try:
+                        slot[2] = ticket.result()
+                    except BaseException as terr:  # noqa: BLE001
+                        slot[2] = terr
+            else:
+                self.stats.drains += 1
+                self._outstanding = (self._start_drain(), pending)
+        self._turn = 1 - cur
+
+    def _start_drain(self) -> DrainHandle:
+        """Launch the pending tickets' coalesced drain, overlapped when
+        the client supports it. Third-party `OracleClient`s without
+        `drain_async` drain synchronously on the driver thread —
+        identical results, no overlap."""
+        start = getattr(self.client, "drain_async", None)
+        if start is not None:
+            return start()
+        handle = DrainHandle()
+        t0 = time.perf_counter()
+        err: Optional[BaseException] = None
+        try:
+            self.client.drain()
+        except BaseException as e:  # noqa: BLE001 — carried by handle
+            err = e
+        handle._finish(err, time.perf_counter() - t0)
+        return handle
 
     # -- lifecycle --------------------------------------------------------
 
     def close(self, abandon: bool = False) -> None:
         """Finish the session: pump every submitted query to completion
-        (unless `abandon`), then reject stragglers and close their plans."""
+        (unless `abandon`), then reject stragglers, close their plans,
+        and reap the channel's drain thread (for a session-owned client
+        only — a caller-shared `OracleClient` outlives the session)."""
         if self._closed:
             return
         if not abandon:
             self._pump()
+        self._await_outstanding()    # settle any in-flight drain
         self._closed = True
-        leftovers = self._queued + [(s[0], s[1]) for s in self._active]
-        self._queued, self._active = [], []
+        leftovers = self._queued + [
+            (s[0], s[1]) for s in self._bufs[0] + self._bufs[1]]
+        self._queued, self._bufs = [], [[], []]
         for handle, plan in leftovers:
             plan.close()
             if not handle._done:
                 handle._error = RuntimeError("QuerySession abandoned")
                 handle._done = True
+        if self._owns_client:
+            close_client = getattr(self.client, "close", None)
+            if close_client is not None:
+                close_client()
 
     def __enter__(self) -> "QuerySession":
         return self

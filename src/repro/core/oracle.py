@@ -15,7 +15,12 @@ therefore splits the old monolithic `BudgetedOracle` into three parts:
     ``submit(indices, ledger=...) -> Ticket`` enqueues a labeling request;
     ``drain()`` is the explicit barrier that resolves everything pending.
     Plans and sessions speak only this protocol, so the expensive callable
-    is invoked at the *channel's* cadence, not the caller's.
+    is invoked at the *channel's* cadence, not the caller's. Clients may
+    additionally expose ``drain_async() -> DrainHandle`` — the overlapped
+    drain surface: the pending set is snapshotted at call time and resolved
+    on a dedicated drain thread so callers keep computing while oracle I/O
+    is in flight. ``drain()`` stays the synchronous wrapper with identical
+    semantics, so every existing caller works unchanged.
 
 `BatchingOracle` — the one real implementation
     Coalesces pending requests from any number of concurrent queries into
@@ -60,8 +65,10 @@ behaves.
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import threading
+import time
 from typing import Callable, List, Optional, Protocol, runtime_checkable
 
 import numpy as np
@@ -237,9 +244,63 @@ class Ticket:
         return self._labels
 
 
+class DrainHandle:
+    """Completion handle for one asynchronous drain.
+
+    Settles exactly once, with either success or the drain's error; the
+    error also poisons every ticket the drain had popped (the same
+    semantics a synchronous `drain()` has), so awaiting the handle and
+    then reading tickets observes one consistent outcome. Callers must
+    `wait()`/`exception()`/`result()` the handle *before* calling
+    `result()` on any ticket the drain owns — a ticket poked mid-flight
+    would trigger a useless synchronous drain of an empty pending set.
+    `duration_s` is the wall time the resolve spent in flight (0.0 for
+    the empty-drain fast path) — the overlap metric sessions report.
+    """
+
+    __slots__ = ("_event", "_error", "tickets", "duration_s")
+
+    def __init__(self, tickets: int = 0):
+        self._event = threading.Event()
+        self._error: Optional[BaseException] = None
+        self.tickets = int(tickets)
+        self.duration_s = 0.0
+
+    def _finish(self, error: Optional[BaseException],
+                duration_s: float = 0.0) -> None:
+        self._error = error
+        self.duration_s = float(duration_s)
+        self._event.set()
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self) -> None:
+        """Block until the drain settles (success or failure)."""
+        self._event.wait()
+
+    def exception(self) -> Optional[BaseException]:
+        """Block until settled; return the drain's error, or None."""
+        self._event.wait()
+        return self._error
+
+    def result(self) -> None:
+        """Block until settled; raise the drain's error if it failed."""
+        err = self.exception()
+        if err is not None:
+            raise err
+
+
 @runtime_checkable
 class OracleClient(Protocol):
-    """The batched labeling channel protocol query plans are driven over."""
+    """The batched labeling channel protocol query plans are driven over.
+
+    `submit`/`drain` are the required surface. Implementations may also
+    provide ``drain_async() -> DrainHandle`` (see `BatchingOracle`);
+    schedulers probe for it with `getattr` and fall back to the
+    synchronous `drain`, so third-party clients stay protocol-complete
+    without it."""
 
     def submit(self, indices,
                ledger: Optional[BudgetLedger] = None) -> Ticket:
@@ -269,6 +330,15 @@ class BatchingOracle:
     minimize. Thread-safe: `submit` and `drain` serialize on one lock
     (drain runs ``fn`` while holding it, so concurrent submitters observe
     either the pre- or post-drain cache, never a partial one).
+
+    `drain_async` is the overlapped-drain surface: it pops the pending
+    tickets *at call time* (so later submits deterministically belong to
+    the next drain) and resolves them on a lazily created, dedicated drain
+    thread, returning a `DrainHandle`. Exception-poisoning semantics are
+    identical to the synchronous path — a failed resolve marks every
+    popped ticket with the error before the handle settles. The drain
+    thread only exists once `drain_async` has been used; `close()` reaps
+    it (pure-`drain()` clients never pay for one).
     """
 
     def __init__(self, fn: Callable[[np.ndarray], np.ndarray],
@@ -281,6 +351,8 @@ class BatchingOracle:
         self._pending: List[Ticket] = []
         self._pending_new = 0
         self._lock = threading.RLock()
+        self._drain_worker: Optional[
+            concurrent.futures.ThreadPoolExecutor] = None
         self.fn_calls = 0
         self.records_labeled = 0
 
@@ -310,6 +382,9 @@ class BatchingOracle:
     def _drain_locked(self) -> None:
         tickets, self._pending = self._pending, []
         self._pending_new = 0
+        self._resolve_guarded(tickets)
+
+    def _resolve_guarded(self, tickets: List[Ticket]) -> None:
         if not tickets:
             return
         try:
@@ -324,6 +399,51 @@ class BatchingOracle:
                 if not t._done:
                     t._error, t._done = err, True
             raise
+
+    def drain_async(self) -> DrainHandle:
+        """Start resolving everything pending on the drain thread.
+
+        The pending set is snapshotted under the lock *now*: tickets
+        submitted after this call belong to the next drain, so overlap
+        never changes which drain owns a request. With nothing pending
+        the returned handle is already settled and no thread is touched.
+        Await the handle before calling `result()` on any popped ticket.
+        """
+        with self._lock:
+            tickets, self._pending = self._pending, []
+            self._pending_new = 0
+            handle = DrainHandle(len(tickets))
+            if not tickets:
+                handle._finish(None)
+                return handle
+            if self._drain_worker is None:
+                self._drain_worker = concurrent.futures.ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="repro-drain")
+
+            def resolve_snapshot():
+                t0 = time.perf_counter()
+                err: Optional[BaseException] = None
+                try:
+                    with self._lock:
+                        self._resolve_guarded(tickets)
+                except BaseException as e:  # noqa: BLE001 — handle carries
+                    err = e
+                handle._finish(err, time.perf_counter() - t0)
+
+            # Enqueued under the lock: concurrent drain_async calls hit
+            # the single drain thread in pop order, so snapshots resolve
+            # in the order their tickets were claimed.
+            self._drain_worker.submit(resolve_snapshot)
+        return handle
+
+    def close(self) -> None:
+        """Reap the drain thread (if `drain_async` ever created one).
+        Safe to call multiple times; the client stays usable for
+        synchronous submit/drain afterwards."""
+        with self._lock:
+            worker, self._drain_worker = self._drain_worker, None
+        if worker is not None:
+            worker.shutdown(wait=True)
 
     def _resolve(self, tickets: List[Ticket]) -> None:
         # 1. attribution + enforcement, in submission order: each record

@@ -17,10 +17,13 @@ Production posture:
     over 1e8+ records never allocates a full-corpus boolean mask;
   * every chunked walk — sketch construction, selection emission, the PT
     stage-2 region draw, `ScoreStore.num_scored` — iterates one shared
-    `ChunkPlan` (shard → chunk spans), and `parallel_map` drives those
-    spans through a small thread pool: memmap reads and the numpy
-    selection/reduction paths release the GIL, so the walks scale across
-    cores. Sinks carry an explicit thread-safety contract (see
+    `ChunkPlan` (shard → chunk spans), and a persistent `WorkerPool`
+    drives those spans through one long-lived thread pool: memmap reads
+    and the numpy selection/reduction paths release the GIL, so the walks
+    scale across cores without paying executor spin-up per call. Walks
+    from concurrent queries compose: `ChunkPlan.fuse` merges same-geometry
+    plans into one span list so k passes touch each data chunk once
+    (`run_fused`). Sinks carry an explicit thread-safety contract (see
     `SelectionSink`).
 """
 from __future__ import annotations
@@ -29,8 +32,8 @@ import concurrent.futures
 import dataclasses
 import queue
 import threading
-from typing import (Callable, Iterable, Iterator, List, Optional, Sequence,
-                    TypeVar)
+from typing import (Callable, Dict, Iterable, Iterator, List, Optional,
+                    Sequence, Tuple, TypeVar)
 
 import numpy as np
 
@@ -98,23 +101,181 @@ class ChunkPlan:
         for shard_id in range(len(self.shard_sizes)):
             yield from self.shard_spans(shard_id)
 
+    @property
+    def geometry(self) -> Tuple[Tuple[int, ...], int]:
+        """Hashable span-structure identity: two plans with equal geometry
+        produce identical span lists and can therefore fuse."""
+        return (tuple(self.shard_sizes), self.chunk_records)
+
+    @staticmethod
+    def fuse(plans: Sequence["ChunkPlan"]) \
+            -> List[Tuple[ChunkSpan, List[int]]]:
+        """Compose several plans' walks into one span list.
+
+        Plans sharing geometry contribute their spans *once*, tagged with
+        every plan index that covers them; distinct geometries keep their
+        own spans. A scheduler walking the fused list runs k same-geometry
+        passes while touching each data chunk once instead of k times —
+        the per-round fusion a multi-query session relies on. Span order:
+        geometry groups in first-appearance order, spans in plan order
+        within a group, so a single-plan fuse degenerates to `list(plan)`.
+        """
+        groups: Dict[Tuple, List[int]] = {}
+        first: List[Tuple[Tuple, "ChunkPlan"]] = []
+        for i, plan in enumerate(plans):
+            g = plan.geometry
+            if g not in groups:
+                groups[g] = []
+                first.append((g, plan))
+            groups[g].append(i)
+        fused: List[Tuple[ChunkSpan, List[int]]] = []
+        for g, plan in first:
+            owners = groups[g]
+            for span in plan:
+                fused.append((span, owners))
+        return fused
+
+
+@dataclasses.dataclass
+class ChunkWalk:
+    """One chunk-streamed pass: run `fn` on every span of `plan`.
+
+    The unit a query plan *yields* when it needs a full chunked walk
+    (selection emission): the scheduler fuses all walks yielded in one
+    round via `ChunkPlan.fuse` and drives the fused span list through the
+    worker pool once (`run_fused`), then resumes each plan."""
+    plan: ChunkPlan
+    fn: Callable[[ChunkSpan], None]
+
+
+class WorkerPool:
+    """Persistent, lazily-built thread pool for the streaming plane.
+
+    Replaces the per-call `ThreadPoolExecutor` spin-up that used to live in
+    `parallel_map`: an engine owns one pool for its whole lifetime, so
+    thread creation is paid once, not per chunk walk. Semantics:
+
+      * `map` preserves item order, and work items carry their output
+        slots, so thread count never changes any output bit;
+      * inline fast path: with `workers <= 1`, a single-item work list, or
+        a call *from one of the pool's own worker threads* (a plan step
+        running on the pool may itself call `map` for its internal walks),
+        the map runs as a plain in-order loop on the calling thread — the
+        nested case would otherwise deadlock a fixed-size pool waiting on
+        its own slots;
+      * a task exception propagates to the caller and the pool stays
+        usable (the executor survives poisoned tasks);
+      * `close()` is idempotent and exception-safe; a closed pool still
+        serves the inline fast paths (they own no threads) but refuses
+        threaded work. Use as a context manager for scoped lifetimes.
+    """
+
+    def __init__(self, workers: int = 1):
+        self.workers = max(1, int(workers))
+        self._ex: Optional[concurrent.futures.ThreadPoolExecutor] = None
+        self._lock = threading.Lock()
+        self._tl = threading.local()
+        self._closed = False
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def _executor(self) -> concurrent.futures.ThreadPoolExecutor:
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("WorkerPool is closed")
+            if self._ex is None:
+                tl = self._tl
+
+                def _mark_worker():
+                    tl.inside_pool = True
+
+                self._ex = concurrent.futures.ThreadPoolExecutor(
+                    max_workers=self.workers,
+                    thread_name_prefix="repro-pool",
+                    initializer=_mark_worker)
+            return self._ex
+
+    def map(self, fn: Callable[[_T], _R], items: Iterable[_T]) -> List[_R]:
+        """Map `fn` over `items` preserving order; threaded when the pool
+        is sized > 1 and the call comes from outside the pool itself."""
+        items = list(items)
+        if (self.workers <= 1 or len(items) <= 1
+                or getattr(self._tl, "inside_pool", False)):
+            return [fn(it) for it in items]
+        return list(self._executor().map(fn, items))
+
+    def close(self) -> None:
+        """Shut the executor down (joining its threads). Idempotent."""
+        with self._lock:
+            self._closed = True
+            ex, self._ex = self._ex, None
+        if ex is not None:
+            ex.shutdown(wait=True)
+
+    def __enter__(self) -> "WorkerPool":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+
+def run_fused(walks: Sequence[ChunkWalk],
+              pool: Optional[WorkerPool] = None) \
+        -> List[Optional[BaseException]]:
+    """Run several chunk walks as one fused span pass over the pool.
+
+    Same-geometry walks share spans (`ChunkPlan.fuse`), so k emission
+    passes touch each data chunk once. Errors are isolated per walk: the
+    first exception a walk's `fn` raises is captured, that walk skips its
+    remaining spans (best effort — spans already in flight on other
+    threads still run), and the other walks keep streaming. Returns one
+    entry per walk: None on success, the captured exception otherwise —
+    the caller throws it into the owning plan.
+    """
+    walks = list(walks)
+    errors: List[Optional[BaseException]] = [None] * len(walks)
+    fused = ChunkPlan.fuse([w.plan for w in walks])
+
+    def run_item(item):
+        span, owners = item
+        for i in owners:
+            if errors[i] is not None:
+                continue
+            try:
+                walks[i].fn(span)
+            except BaseException as err:  # noqa: BLE001 — isolated per walk
+                errors[i] = err
+
+    if pool is not None:
+        pool.map(run_item, fused)
+    else:
+        for it in fused:
+            run_item(it)
+    return errors
+
 
 def parallel_map(fn: Callable[[_T], _R], items: Iterable[_T],
-                 workers: int = 1) -> List[_R]:
+                 workers: int = 1,
+                 pool: Optional[WorkerPool] = None) -> List[_R]:
     """Map `fn` over `items`, preserving order; threaded when workers > 1.
 
-    The streaming plane's worker pool: memmap chunk reads, numpy reductions
-    and the `threshold_select` numpy path all release the GIL, so shard and
-    chunk walks scale across cores without processes. With workers <= 1 this
-    is a plain in-order loop — identical results, zero thread overhead — so
-    callers get determinism-by-construction: work items carry their output
-    slot and never depend on completion order.
+    Back-compat wrapper over `WorkerPool`: with `pool` given, the work
+    rides that persistent pool (the engine path); otherwise a scoped pool
+    lives for this one call — the historical per-call behavior. With
+    workers <= 1 this is a plain in-order loop — identical results, zero
+    thread overhead — so callers get determinism-by-construction: work
+    items carry their output slot and never depend on completion order.
     """
+    if pool is not None:
+        return pool.map(fn, items)
     items = list(items)
     if workers <= 1 or len(items) <= 1:
         return [fn(it) for it in items]
-    with concurrent.futures.ThreadPoolExecutor(max_workers=workers) as ex:
-        return list(ex.map(fn, items))
+    with WorkerPool(workers) as scoped:
+        return scoped.map(fn, items)
 
 
 class DeterministicSource:

@@ -5,22 +5,29 @@ property-test modules to collection errors, install a tiny deterministic
 stand-in into ``sys.modules`` *before* the test modules import it. The
 fallback draws `max_examples` pseudo-random examples per test from a seed
 derived from the test name — no shrinking, no database, but the invariants
-still get fuzzed on every run. When the real hypothesis is importable it is
-used untouched.
+still get fuzzed on every run.
+
+A real install is detected via `importlib.util.find_spec` — a spec probe,
+not an import — so the shim never shadows an installed package (and a
+present-but-broken install surfaces its own import error from the test
+modules instead of being silently papered over). `HYPOTHESIS_IS_FALLBACK`
+records which implementation this run fuzzes with.
 """
 from __future__ import annotations
 
 import hashlib
+import importlib.util
 import sys
 import types
 
+HYPOTHESIS_IS_FALLBACK = False
+
 
 def _install_hypothesis_fallback():
-    try:
-        import hypothesis  # noqa: F401 — real library present
-        return
-    except ImportError:
-        pass
+    global HYPOTHESIS_IS_FALLBACK
+    if importlib.util.find_spec("hypothesis") is not None:
+        return      # real install present: use it untouched
+    HYPOTHESIS_IS_FALLBACK = True
 
     import numpy as np
 

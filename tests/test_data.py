@@ -5,8 +5,9 @@ import pytest
 
 from repro.data import synthetic
 from repro.data.pipeline import (BitmaskStore, CallbackSink, ChunkPlan,
-                                 DeterministicSource, IndexSink, Prefetcher,
-                                 ScoreStore, SelectionStream, parallel_map)
+                                 ChunkWalk, DeterministicSource, IndexSink,
+                                 Prefetcher, ScoreStore, SelectionStream,
+                                 WorkerPool, parallel_map, run_fused)
 
 
 def test_beta_dataset_properties():
@@ -162,6 +163,135 @@ def test_sink_concurrent_emit_same_shard():
     counts = sink.close()
     np.testing.assert_array_equal(counts, [10_000])
     np.testing.assert_array_equal(sink.indices(0), np.arange(10_000))
+
+
+def test_worker_pool_survives_poisoned_task_and_stays_reusable():
+    """A task exception propagates to the caller, but the persistent pool
+    must keep serving later maps — an engine-owned pool lives across many
+    queries and one bad CallbackSink consumer cannot kill it."""
+    pool = WorkerPool(4)
+
+    def boom(x):
+        if x == 7:
+            raise RuntimeError("poisoned task")
+        return x * x
+
+    with pytest.raises(RuntimeError, match="poisoned task"):
+        pool.map(boom, range(20))
+    # same pool, same threads: still fully functional afterwards
+    assert pool.map(lambda x: x + 1, range(50)) == list(range(1, 51))
+    assert pool.map(lambda x: x * x, range(10)) == [x * x
+                                                    for x in range(10)]
+    pool.close()
+
+
+def test_worker_pool_lifecycle_and_inline_paths():
+    """close() is idempotent; a closed pool still serves the inline fast
+    paths (they own no threads) but refuses threaded work; workers<=1 and
+    single-item maps never touch an executor at all."""
+    pool = WorkerPool(4)
+    assert pool.map(lambda x: -x, [3]) == [-3]        # single item: inline
+    assert pool.map(lambda x: -x, []) == []
+    assert pool.map(lambda x: -x, [1, 2, 3]) == [-1, -2, -3]
+    pool.close()
+    pool.close()                                      # idempotent
+    assert pool.closed
+    assert pool.map(lambda x: -x, [5]) == [-5]        # inline still works
+    with pytest.raises(RuntimeError, match="closed"):
+        pool.map(lambda x: -x, [1, 2, 3])             # threaded refused
+    with WorkerPool(1) as serial:
+        # workers=1 is a plain loop — order is the iteration order
+        log = []
+        serial.map(log.append, range(5))
+        assert log == [0, 1, 2, 3, 4]
+
+
+def test_worker_pool_nested_map_runs_inline():
+    """A map issued *from a pool worker thread* must run inline on that
+    thread: plan steps scheduled on the pool call pool.map for their own
+    chunk walks, and a fixed-size pool blocking on its own slots would
+    deadlock."""
+    import threading
+
+    pool = WorkerPool(2)
+    inner_threads = []
+
+    def outer(i):
+        def inner(j):
+            inner_threads.append(threading.current_thread().name)
+            return i * 10 + j
+        return pool.map(inner, range(3))
+
+    got = pool.map(outer, range(8))     # 8 tasks on 2 workers
+    assert got == [[i * 10 + j for j in range(3)] for i in range(8)]
+    # every inner call ran on a pool worker thread (i.e. inline in its
+    # outer task), never by re-entering the executor from outside
+    assert all(name.startswith("repro-pool") for name in inner_threads)
+    pool.close()
+
+
+# -- ChunkPlan fusion --------------------------------------------------------
+
+
+def test_chunk_plan_fuse_span_accounting():
+    """Same-geometry plans share one span list (tagged with every owner);
+    distinct geometries keep their own spans — the per-round fusion that
+    makes k queries touch each data chunk once."""
+    a = ChunkPlan([10, 0, 7], 4)
+    b = ChunkPlan([10, 0, 7], 4)        # same geometry as a
+    c = ChunkPlan([10, 0, 7], 64)       # same shards, coarser chunks
+    assert a.geometry == b.geometry != c.geometry
+    fused = ChunkPlan.fuse([a, b, c])
+    # one span set for {a, b} plus c's own: 5 + 2, not 5 + 5 + 2
+    assert len(fused) == a.total_chunks + c.total_chunks == 7
+    owners = {(sp.shard_id, sp.chunk_id, sp.stop - sp.start): idxs
+              for sp, idxs in fused}
+    assert all(idxs == [0, 1] for (_, _, sz), idxs in owners.items()
+               if sz <= 4)
+    # degenerate fuse of one plan is just its span list
+    solo = ChunkPlan.fuse([a])
+    assert [sp for sp, _ in solo] == list(a)
+    assert all(idxs == [0] for _, idxs in solo)
+
+
+def test_run_fused_matches_per_plan_walks():
+    """Fused execution visits, per walk, exactly the spans a solo walk of
+    its plan would — accounting must match the unfused baseline."""
+    plans = [ChunkPlan([10, 0, 7], 4), ChunkPlan([10, 0, 7], 4),
+             ChunkPlan([12], 5)]
+    solo = [[(sp.shard_id, sp.chunk_id) for sp in p] for p in plans]
+    seen = [[] for _ in plans]
+    walks = [ChunkWalk(p, lambda sp, i=i: seen[i].append(
+        (sp.shard_id, sp.chunk_id))) for i, p in enumerate(plans)]
+    with WorkerPool(1) as pool:
+        errs = run_fused(walks, pool)
+    assert errs == [None, None, None]
+    assert seen == solo
+    # and the fused pass cost: shared spans ran once for both owners
+    assert (len(ChunkPlan.fuse(plans))
+            == plans[0].total_chunks + plans[2].total_chunks)
+
+
+def test_run_fused_isolates_walk_errors():
+    """One walk's failure must not stop the others: its first error comes
+    back in its slot (and its remaining spans are skipped), while every
+    co-fused walk still completes all spans."""
+    plan = ChunkPlan([20], 4)           # 5 spans
+    good = []
+
+    def bad_fn(sp):
+        if sp.chunk_id == 1:
+            raise ValueError("walk died")
+        good.append(("bad", sp.chunk_id))
+
+    ok = []
+    walks = [ChunkWalk(plan, bad_fn),
+             ChunkWalk(plan, lambda sp: ok.append(sp.chunk_id))]
+    errs = run_fused(walks)             # serial path: no pool given
+    assert isinstance(errs[0], ValueError) and errs[1] is None
+    assert ok == [0, 1, 2, 3, 4]        # co-fused walk saw every span
+    # the failing walk stopped at its error
+    assert ("bad", 0) in good and all(c < 1 for _, c in good)
 
 
 # -- selection sinks ---------------------------------------------------------

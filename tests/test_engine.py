@@ -852,3 +852,87 @@ def test_session_submit_time_drain_failure_fails_loud():
     # the engine itself is unharmed
     ok = engine.run(jax.random.PRNGKey(0), array_oracle(ds.labels), q)
     assert ok.total_selected > 0
+
+
+# -- PR 6: overlapped rounds, worker clamp, overlap stats ---------------------
+
+def test_session_overlapped_drains_bit_for_bit_across_workers():
+    """Acceptance: the double-buffered scheduler (drains overlapping the
+    other cohort's compute) is bit-for-bit equal to the sequential path
+    for an RT/PT/JT mix at workers in {1, 4, 8}. clamp_workers=False so
+    the requested counts are honored even on small CI boxes."""
+    ds = make_beta(30_000, 0.02, 1.0, seed=57)
+    shards = np.array_split(ds.scores, 3)
+    oracle = array_oracle(ds.labels)
+    batch = [
+        SUPGQuery(target="recall", gamma=0.9, budget=1200, method="is"),
+        SUPGQuery(target="precision", gamma=0.8, budget=1200, method="is",
+                  two_stage=True),
+        SUPGQuery(target="recall", gamma=0.85, budget=1000, method="noci"),
+        JointSUPGQuery(gamma_recall=0.85, stage_budget=1200),
+    ]
+    key = jax.random.PRNGKey(77)
+    ref = SelectionEngine(shards, num_bins=1024, chunk_records=5_000,
+                          workers=1).run_many(key, oracle, list(batch),
+                                              concurrency=1)
+    for w in (1, 4, 8):
+        with SelectionEngine(shards, num_bins=1024, chunk_records=5_000,
+                             workers=w, clamp_workers=False) as engine:
+            got = engine.run_many(key, oracle, list(batch), concurrency=8)
+        for a, b in zip(ref, got):
+            assert a.tau == b.tau, w
+            np.testing.assert_array_equal(a.shard_counts, b.shard_counts)
+            for ia, ib in zip(_sink_contents(a), _sink_contents(b)):
+                np.testing.assert_array_equal(ia, ib)
+
+
+def test_engine_worker_clamp_logs_once_with_escape_hatch(monkeypatch,
+                                                         caplog):
+    """Oversubscription fix: requested workers are clamped to cpu_count
+    (logged exactly once process-wide); clamp_workers=False keeps the
+    requested count for determinism tests."""
+    import logging
+
+    from repro.core import engine as engine_mod
+
+    monkeypatch.setattr(engine_mod.os, "cpu_count", lambda: 2)
+    monkeypatch.setattr(engine_mod, "_clamp_logged", False)
+    scores = np.linspace(0.0, 1.0, 1_000, dtype=np.float32)
+    with caplog.at_level(logging.INFO, logger="repro.core.engine"):
+        with SelectionEngine([scores], num_bins=64, workers=8) as e1:
+            assert e1.workers == 2
+            with SelectionEngine([scores], num_bins=64, workers=8) as e2:
+                assert e2.workers == 2
+    clamps = [r for r in caplog.records if "clamping" in r.getMessage()]
+    assert len(clamps) == 1                 # logged once, not per engine
+    with SelectionEngine([scores], num_bins=64, workers=8,
+                         clamp_workers=False) as e3:
+        assert e3.workers == 8              # escape hatch honored
+
+
+def test_session_stats_record_overlap_and_fusion():
+    """SessionStats from a batch of same-shape queries: rounds/drains are
+    counted, drain timers are sane, and the emission walks of co-resident
+    queries fused into shared chunk passes (spans_saved > 0)."""
+    ds = make_beta(30_000, 0.02, 1.0, seed=58)
+    engine = SelectionEngine(np.array_split(ds.scores, 2), num_bins=1024,
+                             chunk_records=4_000)
+    oracle = array_oracle(ds.labels)
+    qs = [SUPGQuery(target="recall", gamma=0.9, budget=1000, method="is")
+          for _ in range(4)]
+    keys = jax.random.split(jax.random.PRNGKey(5), len(qs))
+    with engine.session(oracle) as sess:
+        handles = [sess.submit(q, key=k) for q, k in zip(qs, keys)]
+        results = [h.result() for h in handles]
+    assert all(r.total_selected > 0 for r in results)
+    st = sess.stats
+    assert st.rounds > 0
+    assert st.plan_steps >= len(qs)         # every plan stepped >= once
+    assert st.drains >= 1                   # labeling went through drains
+    assert st.drain_busy_s >= st.drain_wait_s >= 0.0
+    assert st.overlap_hidden_s >= 0.0
+    # all four RT emission walks ran through the fusion path, and walks
+    # sharing a round+geometry collapsed into shared spans
+    assert st.fused_walks == len(qs)
+    assert st.walk_spans >= st.fused_spans > 0
+    assert st.spans_saved > 0

@@ -248,3 +248,100 @@ def test_mid_drain_failure_charges_completed_micro_batches():
     np.testing.assert_array_equal(t.result(), 0.0)
     assert ledger.charged == 5              # total == unique records labeled
     assert client.records_labeled == 5
+
+
+# -- async drain (PR 6) -------------------------------------------------------
+
+def test_drain_async_coalesces_and_resolves_tickets():
+    """drain_async labels the pending set in one underlying fn call on the
+    drain thread; after the handle settles, every ticket resolves from its
+    snapshot exactly like a sync drain."""
+    labels = np.arange(100, dtype=np.float32)
+    fn, calls = _counting_oracle(labels)
+    client = BatchingOracle(fn)
+    led = BudgetLedger(50)
+    t1 = client.submit([3, 1, 4], ledger=led)
+    t2 = client.submit([1, 5, 9], ledger=led)
+    handle = client.drain_async()
+    assert handle.result() is None          # blocks until resolved, no error
+    assert handle.done and handle.exception() is None
+    assert handle.tickets == 2 and handle.duration_s >= 0.0
+    assert len(calls) == 1                  # one coalesced invocation
+    np.testing.assert_array_equal(t1.result(), [3.0, 1.0, 4.0])
+    np.testing.assert_array_equal(t2.result(), [1.0, 5.0, 9.0])
+    client.close()
+
+
+def test_drain_async_empty_pending_settles_inline():
+    """Zero pending tickets: the handle comes back already settled and no
+    drain thread is ever created."""
+    client = BatchingOracle(array_oracle(np.ones(10)))
+    handle = client.drain_async()
+    assert handle.done and handle.tickets == 0
+    assert handle.result() is None
+    assert client._drain_worker is None     # fast path spawned nothing
+    client.close()
+
+
+def test_drain_async_snapshot_excludes_later_submits():
+    """Tickets are popped at drain_async() call time: a submit issued after
+    the call belongs to the *next* drain, not the in-flight one — the
+    invariant the double-buffered scheduler's determinism rests on."""
+    fn, calls = _counting_oracle(np.zeros(50))
+    client = BatchingOracle(fn)
+    led = BudgetLedger(50)
+    t1 = client.submit([1, 2], ledger=led)
+    handle = client.drain_async()
+    late = client.submit([7, 8], ledger=led)
+    handle.result()
+    assert handle.tickets == 1
+    np.testing.assert_array_equal(t1.result(), 0.0)
+    # the late ticket is still pending until the next drain
+    assert np.concatenate(calls).tolist() == [1, 2]
+    client.drain()
+    np.testing.assert_array_equal(late.result(), 0.0)
+    client.close()
+
+
+def test_drain_async_poisoning_parity_with_sync_drain():
+    """A mid-drain failure surfaces on handle.result() AND poisons the
+    snapshot's tickets — identical semantics to the sync drain, just
+    delivered through the handle."""
+    client = BatchingOracle(lambda idx: np.zeros(len(idx) + 1))
+    t = client.submit([1, 2], ledger=BudgetLedger(10))
+    handle = client.drain_async()
+    assert isinstance(handle.exception(), ValueError)
+    with pytest.raises(ValueError, match="wrong number"):
+        handle.result()
+    with pytest.raises(ValueError, match="wrong number"):
+        t.result()
+    # the channel itself is not wedged: a clean retry still works
+    ok = BatchingOracle(array_oracle(np.ones(10)))
+    t2 = ok.submit([1], ledger=BudgetLedger(5))
+    ok.drain_async().result()
+    np.testing.assert_array_equal(t2.result(), 1.0)
+    ok.close()
+    client.close()
+
+
+def test_close_reaps_drain_worker_and_client_stays_usable():
+    """close() joins the drain thread and is idempotent; the client still
+    serves synchronous submit/drain afterwards (sessions own the async
+    surface, not the channel's whole lifetime)."""
+    fn, calls = _counting_oracle(np.ones(20))
+    client = BatchingOracle(fn)
+    led = BudgetLedger(20)
+    client.submit([1, 2], ledger=led)
+    client.drain_async().result()
+    assert client._drain_worker is not None
+    client.close()
+    client.close()                          # idempotent
+    assert client._drain_worker is None
+    t = client.submit([3, 4], ledger=led)   # sync path unaffected
+    client.drain()
+    np.testing.assert_array_equal(t.result(), 1.0)
+    # and drain_async lazily re-creates its worker after a close
+    t2 = client.submit([5], ledger=led)
+    client.drain_async().result()
+    np.testing.assert_array_equal(t2.result(), 1.0)
+    client.close()
