@@ -1,0 +1,99 @@
+"""Serving-plane load generator: sustained qps + tail latency.
+
+Eight closed-loop client threads (the acceptance floor) hammer one
+`SelectionServer` whose oracle sleeps 1 ms per underlying invocation —
+the same rate-limited-oracle timescale as the `run_many_*_lat1ms` rows.
+Each client submits RT queries back-to-back (submit, wait for the
+result, submit again) with distinct PRNG keys, so the server sees a
+steady multi-tenant mix: admission control bounds in-flight plans, all
+clients' oracle requests coalesce into the one shared channel, and the
+drain thread overlaps round-trips with plan compute.
+
+Rows:
+  serve_qps      — mean wall µs per completed query across the whole
+                   run (derived carries the sustained queries/s)
+  serve_p99_lat  — p99 end-to-end latency (submit -> result-ready,
+                   queue wait included) from the server's histogram
+"""
+import threading
+import time
+
+import numpy as np
+
+import jax
+
+
+def bench_serve_load():
+    """≥8 concurrent clients, 1 ms simulated-latency oracle, closed loop."""
+    import time as _time
+
+    from repro.core.engine import SelectionEngine
+    from repro.core.oracle import array_oracle
+    from repro.core.queries import SUPGQuery
+    from repro.serve import SelectionServer
+
+    rng = np.random.default_rng(13)
+    n = 100_000
+    scores = rng.beta(0.05, 1.0, n).astype(np.float32)
+    labels = (rng.random(n) < scores).astype(np.float32)
+    # 10k-record engine slice (same as the lat1ms rows): keeps the jax
+    # dispatch floor small so oracle round-trips dominate.
+    sl = slice(0, 10_000)
+    base = array_oracle(labels[sl])
+
+    def fn(idx):
+        _time.sleep(1e-3)                   # simulated oracle RPC latency
+        return base(idx)
+
+    clients, per_client = 8, 4
+    q = SUPGQuery(target="recall", gamma=0.9, budget=400, method="is")
+    keys = jax.random.split(jax.random.PRNGKey(1), clients * per_client)
+    engine = SelectionEngine(np.array_split(scores[sl], 2), num_bins=256,
+                             use_kernel=False)
+    # warmup outside the server: populate jit caches (a long-lived daemon
+    # is warm) without polluting the serving-latency histogram; the
+    # server's own label cache still starts cold.
+    engine.run(jax.random.PRNGKey(0), fn, q)
+    errors = []
+    with SelectionServer(engine, fn, max_inflight=clients,
+                         max_batch=256) as server:
+
+        def client(cid):
+            try:
+                for i in range(per_client):
+                    k = keys[cid * per_client + i]
+                    server.submit(q, tenant=f"client{cid}",
+                                  key=k).result(timeout=120)
+            except Exception as e:  # noqa: BLE001 — surface, don't hang
+                errors.append(e)
+
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        stats = server.stats()
+
+    if errors:
+        raise errors[0]
+    total = clients * per_client
+    assert stats.completed == total and stats.failed == 0
+    qps = total / wall
+    print(f"serve_qps,{wall * 1e6 / total:.0f},clients={clients};"
+          f"queries={total};qps={qps:.1f};"
+          f"oracle_calls={stats.oracle_calls};"
+          f"cache_hits={stats.cache_hits};"
+          f"hidden_ms={stats.overlap_hidden_s * 1e3:.1f}")
+    print(f"serve_p99_lat,{stats.p99_s * 1e6:.0f},"
+          f"p50_us={stats.p50_s * 1e6:.0f};"
+          f"mean_us={stats.mean_s * 1e6:.0f};clients={clients}")
+
+
+ALL = [bench_serve_load]
+
+if __name__ == "__main__":
+    for f in ALL:
+        f()

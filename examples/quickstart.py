@@ -38,14 +38,19 @@ def main():
               f"-> precision={p:.3f} recall={r:.3f}")
 
     # -- streaming path: sharded engine, chunked emission, lazy view --------
-    engine = SelectionEngine(np.array_split(ds.scores, 4), num_bins=4096)
-    query = SUPGQuery(target="recall", gamma=0.9, delta=0.05,
-                      budget=10_000, method="is")
-    sel = engine.run(jax.random.PRNGKey(0), array_oracle(ds.labels), query)
-    # total_selected comes from per-shard counts the sink accumulated while
-    # streaming — no full-corpus mask was ever allocated.
-    r = recall_of(np.concatenate([engine.offsets[i] + sel.indices(i)
-                                  for i in range(sel.num_shards)]), truth)
+    # The context manager releases the engine's worker pool even if the
+    # query raises (same leak-on-error audit as selection_service.py).
+    with SelectionEngine(np.array_split(ds.scores, 4),
+                         num_bins=4096) as engine:
+        query = SUPGQuery(target="recall", gamma=0.9, delta=0.05,
+                          budget=10_000, method="is")
+        sel = engine.run(jax.random.PRNGKey(0), array_oracle(ds.labels),
+                         query)
+        # total_selected comes from per-shard counts the sink accumulated
+        # while streaming — no full-corpus mask was ever allocated.
+        r = recall_of(np.concatenate([engine.offsets[i] + sel.indices(i)
+                                      for i in range(sel.num_shards)]),
+                      truth)
     print(f"streamed recall-target 90%: |R|={sel.total_selected} "
           f"tau={sel.tau:.4f} shard_counts={sel.shard_counts.tolist()} "
           f"-> recall={r:.3f}")

@@ -9,12 +9,15 @@
    ScoreStore (the production scoring plane in miniature).
 3. SELECT: build a SelectionEngine directly on the memory-mapped
    ScoreStore shard and serve a *batch* of RT / PT / JT SUPG queries
-   through `engine.session()` — one cached sketch + sampling state AND
-   one shared, batched labeling channel amortized across the whole batch
-   (concurrent query plans coalesce their oracle requests into
-   micro-batches; records labeled for one query answer the others from
-   the cache for free) — verifying the statistical guarantees and
-   comparing against the U-NoCI baseline used by prior systems.
+   through a `SelectionServer` daemon — one cached sketch + sampling
+   state AND one shared, batched labeling channel amortized across every
+   client (concurrent query plans coalesce their oracle requests into
+   micro-batches; records labeled for one tenant's query answer the
+   others from the cache for free), with admission control, per-tenant
+   oracle quotas, and a token bucket pacing the labeling channel —
+   verifying the statistical guarantees and comparing against the U-NoCI
+   baseline used by prior systems, then printing the server's
+   observability snapshot (`ServerStats`).
    The first query is served *streamed*: results reach the client
    incrementally through a SelectionStream (chunked shard-parallel
    emission; no full-corpus mask is ever materialized), which is how a
@@ -32,6 +35,7 @@ from repro.core.engine import SelectionEngine
 from repro.core.queries import JointSUPGQuery
 from repro.data import synthetic
 from repro.data.pipeline import ScoreStore, SelectionStream
+from repro.serve import SelectionServer
 from repro.launch import serve as servelib
 from repro.launch import train as trainlib
 from repro.models import model
@@ -90,61 +94,64 @@ def main():
           f"mean A(x) pos={scores[truth].mean():.3f} "
           f"neg={scores[~truth].mean():.3f}")
 
-    print("[3/3] batched SUPG queries via SelectionEngine.session "
+    print("[3/3] SUPG queries via the SelectionServer daemon "
           "(budget=1500, delta=5%)")
     # The engine consumes the memory-mapped store directly (zero-copy) and
     # builds its sketch + chunk-level sampling state exactly once for the
-    # batch; workers=2 drives the chunked sketch/emission walks through the
-    # thread pool (results are identical at any worker count).
-    engine = SelectionEngine([store], num_bins=4096, workers=2)
+    # whole service lifetime; workers=2 drives the chunked sketch/emission
+    # walks through the thread pool (results are identical at any worker
+    # count). The context managers guarantee the worker pool, session
+    # pool, and drain thread are released even if a query blows up —
+    # the original version leaked the engine on the error path.
     oracle = array_oracle(labels)
+    with SelectionEngine([store], num_bins=4096, workers=2) as engine:
+        # Streamed serving: the client consumes selection chunks as the
+        # engine emits them, long before the query finishes — at
+        # production scale this is the only shape that works (no
+        # full-corpus mask exists to return).
+        stream_q = SUPGQuery(target="recall", gamma=0.9, delta=0.05,
+                             budget=1500, method="is")
+        stream = SelectionStream(
+            lambda sink: engine.run(jax.random.PRNGKey(3), oracle,
+                                    stream_q, sink=sink,
+                                    chunk_records=4096))
+        streamed = 0
+        for i, (shard_id, gids, folded) in enumerate(stream):
+            streamed += gids.size
+            kind = "folded-positives" if folded else "chunk"
+            print(f"  stream[{i}] shard={shard_id} {kind:16s} "
+                  f"+{gids.size:5d} (total {streamed})")
+        print(f"  streamed selection done: {streamed} records, "
+              f"tau={stream.result.tau:.4f} (counts held by the sink; "
+              f"no mask materialized)")
 
-    # Streamed serving: the client consumes selection chunks as the engine
-    # emits them, long before the query finishes — at production scale this
-    # is the only shape that works (no full-corpus mask exists to return).
-    stream_q = SUPGQuery(target="recall", gamma=0.9, delta=0.05,
-                         budget=1500, method="is")
-    stream = SelectionStream(
-        lambda sink: engine.run(jax.random.PRNGKey(3), oracle, stream_q,
-                                sink=sink, chunk_records=4096))
-    streamed = 0
-    for i, (shard_id, gids, folded) in enumerate(stream):
-        streamed += gids.size
-        kind = "folded-positives" if folded else "chunk"
-        print(f"  stream[{i}] shard={shard_id} {kind:16s} "
-              f"+{gids.size:5d} (total {streamed})")
-    print(f"  streamed selection done: {streamed} records, "
-          f"tau={stream.result.tau:.4f} (counts held by the sink; "
-          f"no mask materialized)")
-
-    # Serve the whole batch through one QuerySession: all five plans run
-    # concurrently and their oracle requests funnel into one BatchingOracle,
-    # so a record labeled for one query answers the others from the cache
-    # for free and the expensive oracle sees coalesced micro-batches.
-    batch = [SUPGQuery(target=target, gamma=gamma, delta=0.05,
-                       budget=1500, method=method)
-             for target, gamma in (("recall", 0.9), ("precision", 0.75))
-             for method in ("is", "noci")]
-    batch.append(JointSUPGQuery(gamma_recall=0.9, stage_budget=1500))
-    keys = jax.random.split(jax.random.PRNGKey(3), len(batch))
-    with engine.session(oracle, max_batch=4096) as sess:
-        handles = [sess.submit(q, key=k) for q, k in zip(batch, keys)]
-        results = [h.result() for h in handles]
-    print(f"  session served {len(batch)} queries with "
-          f"{sess.client.fn_calls} coalesced oracle batches "
-          f"({sess.client.records_labeled} records labeled once, "
-          f"shared across queries)")
-    # Per-round overlap accounting from the double-buffered scheduler:
-    # drains ran on the channel's drain thread while the other cohort
-    # computed, and concurrent emission walks fused into shared passes.
-    st = sess.stats
-    print(f"  overlap: {st.rounds} rounds, {st.drains} async drains "
-          f"({st.drain_busy_s * 1e3:.1f} ms in flight, "
-          f"{st.drain_wait_s * 1e3:.1f} ms blocked, "
-          f"{st.overlap_hidden_s * 1e3:.1f} ms hidden under compute); "
-          f"emission fused {st.fused_walks} walks: "
-          f"{st.walk_spans} spans -> {st.fused_spans} "
-          f"({st.spans_saved} chunk touches saved)")
+        # Serve the batch through the daemon: concurrent clients submit
+        # on behalf of tenants, admission control bounds in-flight plans,
+        # per-tenant BudgetLedger quotas meter the oracle, and a token
+        # bucket paces the shared labeling channel (the paper's §4.1
+        # rate-limited-oracle model, made literal). All plans' oracle
+        # requests funnel into one BatchingOracle, so a record labeled
+        # for one tenant answers the others from the cache for free.
+        batch = [SUPGQuery(target=target, gamma=gamma, delta=0.05,
+                           budget=1500, method=method)
+                 for target, gamma in (("recall", 0.9),
+                                       ("precision", 0.75))
+                 for method in ("is", "noci")]
+        batch.append(JointSUPGQuery(gamma_recall=0.9, stage_budget=1500))
+        keys = jax.random.split(jax.random.PRNGKey(3), len(batch))
+        tenants = ["supg", "baseline", "supg", "baseline", "joint"]
+        with SelectionServer(engine, oracle, own_engine=False,
+                             max_inflight=4, max_batch=4096,
+                             rate=500_000, burst=50_000,
+                             quotas={"supg": 10_000, "baseline": 10_000,
+                                     "joint": 40_000}) as server:
+            handles = [server.submit(q, tenant=t, key=k)
+                       for q, t, k in zip(batch, tenants, keys)]
+            results = [h.result(timeout=600) for h in handles]
+            stats = server.stats()
+    print("  --- ServerStats ---")
+    for line in stats.format().splitlines():
+        print(f"  {line}")
     for q, sel in zip(batch, results):
         mask = np.concatenate(sel.masks)
         selected = np.nonzero(mask)[0]

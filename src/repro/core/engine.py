@@ -230,6 +230,7 @@ class ShardedSelection:
 
     @property
     def num_shards(self) -> int:
+        """Number of score shards this selection spans."""
         return len(self.shard_sizes)
 
     @property
@@ -241,6 +242,7 @@ class ShardedSelection:
 
     @property
     def total_selected(self) -> int:
+        """Total selected records (from counts — no mask materialization)."""
         if self._counts is not None:
             return int(self._counts.sum())
         return int(sum(int(m.sum()) for m in self.masks))
@@ -274,7 +276,24 @@ class _ShardChunkState:
 
 
 class SelectionEngine:
-    """Executes batches of SUPG queries over a list of score shards."""
+    """Executes batches of SUPG queries over a list of score shards.
+
+    Construction pays all O(n) work once (sketch + hierarchical sampling
+    state, see the module docstring); queries then run off the cache.
+    Use as a context manager so the engine's worker pool is released:
+
+    >>> import numpy as np
+    >>> from repro.core.queries import SUPGQuery
+    >>> scores = np.linspace(0.0, 1.0, 512, dtype=np.float32)
+    >>> labels = (scores > 0.75).astype(np.float32)
+    >>> q = SUPGQuery(target="recall", gamma=0.9, delta=0.1,
+    ...               budget=128, method="is")
+    >>> with SelectionEngine([scores[:256], scores[256:]], num_bins=32,
+    ...                      use_kernel=False) as eng:
+    ...     sel = eng.run(None, lambda idx: labels[idx], q)
+    ...     bool(0.0 <= sel.tau <= 1.0), sel.total_selected > 0
+    (True, True)
+    """
 
     def __init__(self, shards: Sequence, num_bins: int = 4096,
                  use_kernel: Optional[bool] = None,
@@ -508,7 +527,8 @@ class SelectionEngine:
 
     def _run_plan(self, key, query: SUPGQuery, *,
                   sink: Optional[pipeline.SelectionSink] = None,
-                  chunk_records: Optional[int] = None) \
+                  chunk_records: Optional[int] = None,
+                  ledger_parent: Optional[BudgetLedger] = None) \
             -> Generator[object, Optional[np.ndarray], ShardedSelection]:
         """Resumable plan for one RT/PT query.
 
@@ -520,10 +540,13 @@ class SelectionEngine:
         directly). Everything between yields is pure compute off the
         cached state, so a scheduler may interleave any number of plans
         and answer their requests from one coalesced labeling channel.
-        Returns the ShardedSelection via StopIteration.value.
+        `ledger_parent` chains the query's budget ledger under a coarser
+        shared ledger (the serving plane's per-tenant quota) — see
+        `core.oracle.BudgetLedger`. Returns the ShardedSelection via
+        StopIteration.value.
         """
         key = jax.random.PRNGKey(0) if key is None else key
-        ledger = BudgetLedger(query.budget)
+        ledger = BudgetLedger(query.budget, parent=ledger_parent)
         s = query.budget
         if query.target == "recall":
             scheme = {"is": query.weight_scheme, "uniform": "uniform",
@@ -583,19 +606,24 @@ class SelectionEngine:
 
     def _run_joint_plan(self, key, query: JointSUPGQuery, *,
                         sink: Optional[pipeline.SelectionSink] = None,
-                        chunk_records: Optional[int] = None) \
+                        chunk_records: Optional[int] = None,
+                        ledger_parent: Optional[BudgetLedger] = None) \
             -> Generator[object, Optional[np.ndarray], ShardedSelection]:
         """Resumable plan for one JT query (Appendix A): the RT sub-plan
         (delegated via `yield from`, so its oracle requests ride the same
         channel), then chunked verification requests over the candidate
         set. The verification ledger is capped at n_total — unbounded by
-        design — and exists for `oracle_calls` attribution only."""
+        design — and exists for `oracle_calls` attribution; under a
+        `ledger_parent` (tenant quota) verification labels are metered
+        against the parent too, so a quota-capped JT query fails loudly
+        instead of labeling past its tenant's allowance."""
         rt = SUPGQuery(target="recall", gamma=query.gamma_recall,
                        delta=query.delta, budget=query.stage_budget,
                        method=query.method)
         cand = yield from self._run_plan(key, rt,
-                                         chunk_records=chunk_records)
-        vledger = BudgetLedger(self.n_total)
+                                         chunk_records=chunk_records,
+                                         ledger_parent=ledger_parent)
+        vledger = BudgetLedger(self.n_total, parent=ledger_parent)
         out = pipeline.IndexSink() if sink is None else sink
         chunk = int(chunk_records or self.chunk_records)
         sizes = [int(s.shape[0]) for s in self.shards]
@@ -621,12 +649,15 @@ class SelectionEngine:
             sampled_positive_global=cand.sampled_positive_global,
             sink=out, shard_sizes=sizes, counts=counts)
 
-    def _plan_for(self, key, query, *, sink=None, chunk_records=None):
+    def _plan_for(self, key, query, *, sink=None, chunk_records=None,
+                  ledger_parent=None):
         if isinstance(query, JointSUPGQuery):
             return self._run_joint_plan(key, query, sink=sink,
-                                        chunk_records=chunk_records)
+                                        chunk_records=chunk_records,
+                                        ledger_parent=ledger_parent)
         return self._run_plan(key, query, sink=sink,
-                              chunk_records=chunk_records)
+                              chunk_records=chunk_records,
+                              ledger_parent=ledger_parent)
 
     # -- query entry points -----------------------------------------------
 
@@ -946,9 +977,11 @@ class QueryHandle:
 
     @property
     def done(self) -> bool:
+        """True once this query's plan has completed (or failed)."""
         return self._done
 
     def result(self) -> ShardedSelection:
+        """This query's `ShardedSelection` (pumps the session if needed)."""
         if not self._done:
             self._session._pump(until=self)
         if self._error is not None:
@@ -1019,10 +1052,26 @@ class QuerySession:
     ticket it owned, so nothing fails silently.
 
     The scheduler itself runs on whichever thread pumps it (a
-    `handle.result()` call or the context-manager exit) — the only
-    background activity is the channel's drain thread, which never
-    touches plan or engine state, so results are deterministic functions
-    of (keys, queries, oracle, concurrency).
+    `handle.result()` call, a `step()` loop, or the context-manager
+    exit) — the only background activity is the channel's drain thread,
+    which never touches plan or engine state, so results are
+    deterministic functions of (keys, queries, oracle, concurrency).
+
+    >>> import jax, numpy as np
+    >>> from repro.core.queries import SUPGQuery
+    >>> scores = np.linspace(0.0, 1.0, 512, dtype=np.float32)
+    >>> labels = (scores > 0.75).astype(np.float32)
+    >>> qs = [SUPGQuery(target="recall", gamma=0.9, delta=0.1,
+    ...                 budget=128, method="is") for _ in range(3)]
+    >>> keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    >>> with SelectionEngine([scores], num_bins=32,
+    ...                      use_kernel=False) as eng:
+    ...     with eng.session(lambda idx: labels[idx]) as sess:
+    ...         handles = [sess.submit(q, key=k)
+    ...                    for q, k in zip(qs, keys)]
+    ...         results = [h.result() for h in handles]
+    >>> len(results), sess.client.fn_calls <= len(qs)  # coalesced drains
+    (3, True)
     """
 
     def __init__(self, engine: SelectionEngine, oracle_fn, *,
@@ -1048,19 +1097,23 @@ class QuerySession:
 
     def submit(self, query, *, key=None,
                sink: Optional[pipeline.SelectionSink] = None,
-               chunk_records: Optional[int] = None) -> QueryHandle:
+               chunk_records: Optional[int] = None,
+               ledger_parent: Optional[BudgetLedger] = None) -> QueryHandle:
         """Enqueue one RT/PT/JT query; returns its `QueryHandle`.
 
         `key` defaults to PRNGKey(0) (pass distinct keys for distinct
         samples — `run_many` splits one key across its batch). The plan
         starts when a scheduler turn has a free cohort slot
         (`concurrency` caps the two cohorts' combined size).
+        `ledger_parent` chains the query's budget ledger under a shared
+        quota ledger — the serving plane passes each tenant's here.
         """
         if self._closed:
             raise RuntimeError("QuerySession is closed")
         handle = QueryHandle(self, query, sink)
         plan = self.engine._plan_for(key, query, sink=sink,
-                                     chunk_records=chunk_records)
+                                     chunk_records=chunk_records,
+                                     ledger_parent=ledger_parent)
         self._queued.append((handle, plan))
         return handle
 
@@ -1074,6 +1127,27 @@ class QuerySession:
     def _work_left(self) -> bool:
         return bool(self._queued or self._bufs[0] or self._bufs[1]
                     or self._outstanding is not None)
+
+    @property
+    def in_flight(self) -> int:
+        """Queries admitted or queued but not yet completed."""
+        return (len(self._queued) + len(self._bufs[0])
+                + len(self._bufs[1]))
+
+    def step(self) -> bool:
+        """Advance the scheduler by exactly one turn; True if work remains.
+
+        The incremental pump a long-lived host (the `repro.serve` plane)
+        drives from its own scheduler thread: submit() any number of
+        queries, call `step()` until it returns False (or poll handles'
+        `done` between turns), and new submissions join the next turn's
+        admission. Equivalent to the internal pumping `result()` does,
+        exposed one turn at a time so a server can interleave admission,
+        timeout bookkeeping, and completion delivery with plan progress.
+        """
+        if self._work_left():
+            self._round()
+        return self._work_left()
 
     def _pump(self, until: Optional[QueryHandle] = None) -> None:
         """Run scheduler turns until `until` (or everything) completes."""

@@ -163,23 +163,69 @@ class BudgetLedger:
     attribution rule under a shared cache) and which records this query
     requested, so `labeled_positives()` reflects exactly this query's
     sample — never co-batched queries' labels.
+
+    Ledgers chain: `parent` names a coarser shared ledger (the serving
+    plane's per-tenant quota) that every charge flows through as well.
+    Enforcement covers the whole chain — a charge that fits the query's
+    own budget but would blow the tenant quota fails exactly like a
+    per-query overrun (`BudgetExceededError`, the failing ticket alone),
+    so a tenant exhausting its quota mid-drain cannot starve co-batched
+    queries of other tenants. `label` names the ledger in error messages
+    ("tenant 'abc' quota") so clients can tell a quota rejection from a
+    per-query ORACLE LIMIT.
+
+    >>> tenant = BudgetLedger(5, label="tenant 'abc' quota")
+    >>> q1, q2 = BudgetLedger(4, parent=tenant), BudgetLedger(4, parent=tenant)
+    >>> q1.charge(3); (q1.remaining, q2.remaining)   # parent caps q2 at 2
+    (1, 2)
+    >>> try:
+    ...     q2.charge(3)
+    ... except BudgetExceededError as e:
+    ...     print(e)
+    oracle budget 5 exceeded (tenant 'abc' quota): 3 used, 3 requested
     """
 
-    def __init__(self, budget: int):
+    def __init__(self, budget: int, *,
+                 parent: Optional["BudgetLedger"] = None,
+                 label: Optional[str] = None):
         self.budget = int(budget)
         self.charged = 0
+        self.parent = parent
+        self.label = label
         self._seen = _LabelCache()   # records this query requested
+
+    def chain(self) -> List["BudgetLedger"]:
+        """This ledger followed by its ancestors (query -> tenant -> ...)."""
+        out, node = [], self
+        while node is not None:
+            out.append(node)
+            node = node.parent
+        return out
 
     @property
     def remaining(self) -> int:
-        return self.budget - self.charged
+        """Headroom left on the tightest ledger of the chain."""
+        return min(l.budget - l.charged for l in self.chain())
 
     def charge(self, k: int) -> None:
-        if self.charged + k > self.budget:
-            raise BudgetExceededError(
-                f"oracle budget {self.budget} exceeded: "
-                f"{self.charged} used, {k} requested")
-        self.charged += int(k)
+        """Commit `k` attributed labels to every ledger of the chain.
+
+        Checked before committed, so a chain whose parent rejects leaves
+        the child uncharged (the drain's pre-check makes rejection here
+        unreachable on the batched path, but direct callers keep atomic
+        semantics)."""
+        for led in self.chain():
+            if led.charged + k > led.budget:
+                raise led.exceeded(led.charged, int(k))
+        for led in self.chain():
+            led.charged += int(k)
+
+    def exceeded(self, used: int, requested: int) -> "BudgetExceededError":
+        """Build this ledger's budget-overrun error (labelled for quotas)."""
+        tag = f" ({self.label})" if self.label else ""
+        return BudgetExceededError(
+            f"oracle budget {self.budget} exceeded{tag}: "
+            f"{used} used, {requested} requested")
 
     def record(self, idx: np.ndarray, labels: np.ndarray) -> None:
         """Attach resolved labels for records this query requested."""
@@ -231,9 +277,11 @@ class Ticket:
 
     @property
     def done(self) -> bool:
+        """True once a drain resolved (or poisoned) this ticket."""
         return self._done
 
     def result(self) -> np.ndarray:
+        """Labels aligned to the submitted indices (drains if pending)."""
         if not self._done:
             self._owner.drain()
         if self._error is not None:
@@ -274,6 +322,7 @@ class DrainHandle:
 
     @property
     def done(self) -> bool:
+        """True once the drain has settled (success or failure)."""
         return self._event.is_set()
 
     def wait(self) -> None:
@@ -325,11 +374,34 @@ class BatchingOracle:
     never cached), then invokes ``fn`` on the surviving unique records in
     sorted micro-batches of at most `max_batch`.
 
-    `fn_calls` / `records_labeled` count underlying oracle invocations and
-    labeled records — the serving-side metrics a session exists to
-    minimize. Thread-safe: `submit` and `drain` serialize on one lock
-    (drain runs ``fn`` while holding it, so concurrent submitters observe
-    either the pre- or post-drain cache, never a partial one).
+    `fn_calls` / `records_labeled` / `cache_hits` count underlying oracle
+    invocations, labeled records, and requested records answered without
+    a new labeling (from the cache, or coalesced into an earlier
+    co-batched ticket's claim) — the serving-side metrics a session
+    exists to minimize. Thread-safe: `submit` and `drain` serialize on
+    one lock (drain runs ``fn`` while holding it, so concurrent
+    submitters observe either the pre- or post-drain cache, never a
+    partial one).
+
+    `pacer`, when given, is the serving plane's rate-limiter hook: it is
+    called with the micro-batch size right before each ``fn`` invocation
+    (see `repro.serve.TokenBucket`), so oracle pacing composes with
+    `drain_async` — a paced drain blocks on the drain thread while plan
+    compute keeps running.
+
+    >>> import numpy as np
+    >>> calls = []
+    >>> def fn(idx):
+    ...     calls.append(len(idx))
+    ...     return (np.asarray(idx) % 2).astype(np.float32)
+    >>> client = BatchingOracle(fn)
+    >>> a = client.submit([3, 4, 5], ledger=BudgetLedger(8))
+    >>> b = client.submit([4, 5, 6], ledger=BudgetLedger(8))
+    >>> client.drain()                  # one coalesced fn micro-batch
+    >>> calls, client.fn_calls, client.cache_hits
+    ([4], 1, 2)
+    >>> [int(v) for v in b.result()]    # labels aligned to b's indices
+    [0, 1, 0]
 
     `drain_async` is the overlapped-drain surface: it pops the pending
     tickets *at call time* (so later submits deterministically belong to
@@ -342,11 +414,19 @@ class BatchingOracle:
     """
 
     def __init__(self, fn: Callable[[np.ndarray], np.ndarray],
-                 max_batch: Optional[int] = None):
+                 max_batch: Optional[int] = None,
+                 pacer: Optional[Callable[[int], object]] = None):
         if max_batch is not None and max_batch <= 0:
             raise ValueError("max_batch must be positive")
         self._fn = fn
         self.max_batch = max_batch
+        # The rate-limiter hook on the drain path: called with the
+        # micro-batch size immediately before each underlying `fn`
+        # invocation (a `serve.TokenBucket` blocks here until the batch
+        # is inside the configured rate). Because resolution runs on the
+        # drain thread under `drain_async`, pacing throttles the channel
+        # while plan compute keeps overlapping it.
+        self._pacer = pacer
         self._cache = _LabelCache()
         self._pending: List[Ticket] = []
         self._pending_new = 0
@@ -355,13 +435,17 @@ class BatchingOracle:
             concurrent.futures.ThreadPoolExecutor] = None
         self.fn_calls = 0
         self.records_labeled = 0
+        self.cache_hits = 0
 
     @property
     def cache_size(self) -> int:
+        """Number of distinct records with a cached label."""
         return len(self._cache)
 
     def submit(self, indices,
                ledger: Optional[BudgetLedger] = None) -> Ticket:
+        """Enqueue a labeling request; resolved at the next drain (or
+        immediately, if the pending new-record count trips `max_batch`)."""
         idx = np.asarray(indices, np.int64).reshape(-1)
         with self._lock:
             t = Ticket(self, idx, ledger)
@@ -376,6 +460,7 @@ class BatchingOracle:
             return t
 
     def drain(self) -> None:
+        """Barrier: resolve every pending ticket on the calling thread."""
         with self._lock:
             self._drain_locked()
 
@@ -448,26 +533,33 @@ class BatchingOracle:
     def _resolve(self, tickets: List[Ticket]) -> None:
         # 1. attribution + enforcement, in submission order: each record
         #    not in the cache is claimed by the earliest ticket requesting
-        #    it; a ticket whose claims would blow its ledger fails alone
+        #    it; a ticket whose claims would blow any ledger of its chain
+        #    (its own ORACLE LIMIT or a shared parent quota) fails alone
         #    and its exclusive claims are released (later tickets may
         #    re-claim them).
         claimed = np.empty(0, np.int64)          # sorted union of claims
         claims: List = []                        # (ticket, its new records)
         drain_charge: dict = {}                  # ledger -> pending charge
         for t in tickets:
+            uniq_requested = int(np.unique(t.indices).size)
             new = self._cache.missing(t.indices)
             if claimed.size:
                 new = new[~np.isin(new, claimed)]
             if t.ledger is not None:
-                pend = drain_charge.get(id(t.ledger), 0)
-                if t.ledger.charged + pend + new.size > t.ledger.budget:
-                    t._error = BudgetExceededError(
-                        f"oracle budget {t.ledger.budget} exceeded: "
-                        f"{t.ledger.charged + pend} used, "
-                        f"{new.size} requested in coalesced batch")
+                chain = t.ledger.chain()
+                over = next(
+                    (led for led in chain
+                     if (led.charged + drain_charge.get(id(led), 0)
+                         + new.size > led.budget)), None)
+                if over is not None:
+                    used = over.charged + drain_charge.get(id(over), 0)
+                    t._error = over.exceeded(used, int(new.size))
                     t._done = True
                     continue
-                drain_charge[id(t.ledger)] = pend + new.size
+                for led in chain:
+                    drain_charge[id(led)] = (
+                        drain_charge.get(id(led), 0) + int(new.size))
+            self.cache_hits += uniq_requested - int(new.size)
             claims.append((t, new))
             claimed = np.union1d(claimed, new)
         # 2. label the surviving union in sorted micro-batches <= max_batch,
@@ -478,6 +570,8 @@ class BatchingOracle:
         step = self.max_batch or max(int(claimed.size), 1)
         for start in range(0, int(claimed.size), step):
             chunk = claimed[start:start + step]
+            if self._pacer is not None:
+                self._pacer(int(chunk.size))
             labels = np.asarray(self._fn(chunk), np.float32).reshape(-1)
             if labels.shape[0] != chunk.shape[0]:
                 raise ValueError("oracle returned wrong number of labels")
@@ -537,14 +631,17 @@ class BudgetedOracle:
 
     @property
     def budget(self) -> int:
+        """The query's ORACLE LIMIT."""
         return self.ledger.budget
 
     @property
     def calls_used(self) -> int:
+        """Labels charged so far (repeat draws are free, see class doc)."""
         return self.ledger.charged
 
     @property
     def remaining(self) -> int:
+        """Budget headroom left."""
         return self.ledger.remaining
 
     def __call__(self, indices) -> np.ndarray:

@@ -75,6 +75,12 @@ class ChunkPlan:
     state computed by one pass (e.g. the sampling chunk masses accumulated
     during the sketch pass) is addressable by any other via
     ``(shard_id, chunk_id)``. Empty shards contribute no spans.
+
+    >>> plan = ChunkPlan([5, 3], chunk_records=2)
+    >>> [(s.shard_id, s.chunk_id, s.start, s.stop) for s in plan]
+    [(0, 0, 0, 2), (0, 1, 2, 4), (0, 2, 4, 5), (1, 0, 0, 2), (1, 1, 2, 3)]
+    >>> plan.total_chunks
+    5
     """
 
     def __init__(self, shard_sizes: Sequence[int], chunk_records: int):
@@ -168,6 +174,10 @@ class WorkerPool:
       * `close()` is idempotent and exception-safe; a closed pool still
         serves the inline fast paths (they own no threads) but refuses
         threaded work. Use as a context manager for scoped lifetimes.
+
+    >>> with WorkerPool(4) as pool:
+    ...     pool.map(lambda x: x * x, range(5))   # order preserved
+    [0, 1, 4, 9, 16]
     """
 
     def __init__(self, workers: int = 1):
@@ -429,6 +439,18 @@ class SelectionSink:
     and `open` refuses a sink that is already open — two queries sharing a
     sink object would silently interleave their emissions. A sink may be
     *reused* sequentially (open after close), which resets its state.
+
+    The `IndexSink` flow, driven by hand:
+
+    >>> import numpy as np
+    >>> sink = IndexSink()
+    >>> sink.open([4, 4])                    # two shards of 4 records
+    >>> sink.fold(1, np.asarray([0]))        # labeled positive below tau
+    >>> sink.emit(0, np.asarray([1, 3]))     # a {A >= tau} chunk
+    >>> sink.close().tolist()                # per-shard counts
+    [2, 1]
+    >>> sink.indices(0).tolist(), sink.mask(1).tolist()
+    ([1, 3], [True, False, False, False])
     """
 
     def open(self, shard_sizes: Sequence[int]) -> None:

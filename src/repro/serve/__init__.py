@@ -1,0 +1,28 @@
+"""Serving plane: a rate-limited, quota-metered daemon around the engine.
+
+`SelectionServer` hosts one long-lived `SelectionEngine` plus a
+`QuerySession` pool behind a thread-safe `submit(query, tenant=...)`
+API with admission control, per-tenant quotas (`BudgetLedger` chains),
+and `TokenBucket` pacing of the shared oracle channel. See
+`docs/architecture.md` for where this sits in the stack.
+"""
+from repro.core.oracle import BudgetExceededError
+from repro.serve.limiter import RateLimitError, TokenBucket
+from repro.serve.server import (AdmissionError, QueueTimeoutError,
+                                SelectionServer, ServerClosedError,
+                                ServerHandle)
+from repro.serve.stats import LatencyHistogram, ServerStats, TenantStats
+
+__all__ = [
+    "SelectionServer",
+    "ServerHandle",
+    "ServerStats",
+    "TenantStats",
+    "LatencyHistogram",
+    "TokenBucket",
+    "RateLimitError",
+    "AdmissionError",
+    "QueueTimeoutError",
+    "ServerClosedError",
+    "BudgetExceededError",
+]

@@ -1,0 +1,431 @@
+"""`SelectionServer` — the long-lived serving plane around `QuerySession`.
+
+The engine is a library; this module makes it a daemon. One server hosts:
+
+  * one long-lived `SelectionEngine` (sketch + sampling state built once,
+    amortized over every query the process ever serves),
+  * one shared `BatchingOracle` channel — optionally paced by a
+    `TokenBucket` (the paper's §4.1 rate-limited oracle, made literal) —
+    so concurrent clients' oracle requests coalesce into micro-batches
+    and share one label cache,
+  * a pool of `QuerySession`s driven by a single scheduler thread
+    (`step()` turns), so client threads never touch engine state,
+  * admission control: at most `max_inflight` queries execute; the rest
+    wait in a bounded FIFO overflow queue (`queue_depth`), rejected
+    synchronously with `AdmissionError` when it is full and expired with
+    `QueueTimeoutError` when they out-wait `queue_timeout_s`,
+  * per-tenant metering: every query's budget ledger chains under its
+    tenant's quota ledger, so a tenant exhausting its quota mid-drain
+    fails *its own* ticket alone (`BudgetExceededError`, labelled with
+    the tenant) while co-batched queries of other tenants proceed —
+    exactly the per-query poisoning semantics of the session scheduler.
+
+Results are bit-for-bit identical to `engine.run_many` over the same
+(queries, keys) for any pure oracle: plans are pure given (key, labels),
+and neither admission order, pacing, queue waits, nor tenant metering
+changes which labels a query sees — only *when* the oracle is invoked
+and who pays for it.
+
+Client API::
+
+    with SelectionServer(engine, oracle_fn, max_inflight=8,
+                         rate=10_000, burst=2_000,
+                         quotas={"alice": 5_000}) as server:
+        h = server.submit(query, tenant="alice", key=key)
+        sel = h.result()          # blocks this client only
+        print(server.stats().format())
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.core.engine import (QueryHandle, QuerySession, SelectionEngine,
+                               ShardedSelection)
+from repro.core.oracle import BatchingOracle, BudgetLedger, OracleClient
+from repro.data import pipeline
+from repro.serve.limiter import TokenBucket
+from repro.serve.stats import LatencyHistogram, ServerStats, TenantStats
+
+_UNMETERED = 1 << 62      # tenant ledger budget when no quota configured
+
+
+class ServerClosedError(RuntimeError):
+    """The server is closing or closed; the query was not accepted."""
+
+
+class AdmissionError(RuntimeError):
+    """Admission control refused the query (overflow queue full)."""
+
+
+class QueueTimeoutError(AdmissionError):
+    """The query expired in the overflow queue before being admitted."""
+
+
+class ServerHandle:
+    """Client-facing future for one submitted query.
+
+    `result()` blocks the calling client thread only — all scheduling
+    happens on the server's own thread — and returns the query's
+    `ShardedSelection` or raises its typed error (`QueueTimeoutError`,
+    `BudgetExceededError` for a budget/quota overrun, `ServerClosedError`
+    if the server shut down first).
+    """
+
+    def __init__(self, query, tenant: str, key, sink, chunk_records):
+        self.query = query
+        self.tenant = tenant
+        self._key = key
+        self._sink = sink
+        self._chunk_records = chunk_records
+        self._t_submit = time.monotonic()
+        self._deadline: Optional[float] = None    # overflow-queue expiry
+        self._event = threading.Event()
+        self._result: Optional[ShardedSelection] = None
+        self._error: Optional[BaseException] = None
+
+    @property
+    def done(self) -> bool:
+        """True once the query finished (result or error)."""
+        return self._event.is_set()
+
+    def _finish(self, result=None, error=None) -> float:
+        self._result, self._error = result, error
+        latency = time.monotonic() - self._t_submit
+        self._event.set()
+        return latency
+
+    def result(self, timeout: Optional[float] = None) -> ShardedSelection:
+        """Block until the query finishes; return its selection.
+
+        Raises the query's error if it failed, or `TimeoutError` if
+        `timeout` seconds elapse first (the query keeps running — call
+        `result()` again to keep waiting).
+        """
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"query for tenant {self.tenant!r} still running "
+                f"after {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+
+class _Tenant:
+    """Server-internal per-tenant state: quota ledger + counters."""
+
+    def __init__(self, name: str, quota: Optional[int]):
+        self.stats = TenantStats(tenant=name, quota=quota)
+        # Unmetered tenants still get a ledger so oracle usage is
+        # attributed per tenant in ServerStats; the budget is just never
+        # reachable.
+        self.ledger = BudgetLedger(
+            _UNMETERED if quota is None else int(quota),
+            label=f"tenant {name!r} quota")
+
+
+class SelectionServer:
+    """Rate-limited, quota-metered daemon serving SUPG queries.
+
+    Parameters
+    ----------
+    engine: the hosted `SelectionEngine` (closed with the server when
+        `own_engine`, the default — pass ``own_engine=False`` when the
+        caller manages the engine's lifetime, e.g. inside an existing
+        ``with engine:`` block).
+    oracle_fn: plain ``indices -> labels`` callable wrapped in the
+        server's shared `BatchingOracle`, or an existing `OracleClient`
+        (then `rate`/`burst`/`max_batch` must be None — the channel's
+        owner configured it).
+    max_inflight: queries executing concurrently across the session pool.
+    queue_depth: overflow-queue capacity; a full queue rejects at
+        `submit` with `AdmissionError`.
+    queue_timeout_s: max time a query may wait for admission before its
+        handle fails with `QueueTimeoutError` (None = wait forever).
+    rate, burst: `TokenBucket` pacing of the oracle channel, in records
+        per second and records of burst capacity (None = unpaced).
+    max_batch: records per underlying oracle call (see `BatchingOracle`).
+    quotas: tenant name -> total oracle-label quota (a `BudgetLedger`
+        each query of that tenant chains under). Unknown tenants get
+        `default_quota` (None = unmetered).
+    sessions: size of the `QuerySession` pool. All sessions share the
+        one channel/cache; more sessions only add scheduling isolation.
+    """
+
+    def __init__(self, engine: SelectionEngine, oracle_fn, *,
+                 max_inflight: int = 8, queue_depth: int = 64,
+                 queue_timeout_s: Optional[float] = None,
+                 rate: Optional[float] = None,
+                 burst: Optional[float] = None,
+                 max_batch: Optional[int] = None,
+                 quotas: Optional[Dict[str, int]] = None,
+                 default_quota: Optional[int] = None,
+                 sessions: int = 1,
+                 own_engine: bool = True):
+        self.engine = engine
+        self._own_engine = bool(own_engine)
+        self.bucket: Optional[TokenBucket] = None
+        if isinstance(oracle_fn, OracleClient):
+            if rate is not None or burst is not None or max_batch is not None:
+                raise ValueError(
+                    "rate/burst/max_batch configure the server's own "
+                    "channel; an externally-owned OracleClient carries "
+                    "its own configuration")
+            self.channel = oracle_fn
+            self._own_channel = False
+        else:
+            if rate is not None:
+                self.bucket = TokenBucket(rate,
+                                          rate if burst is None else burst)
+            elif burst is not None:
+                raise ValueError("burst requires rate")
+            self.channel = BatchingOracle(oracle_fn, max_batch=max_batch,
+                                          pacer=self.bucket)
+            self._own_channel = True
+        self.max_inflight = max(1, int(max_inflight))
+        self.queue_depth = max(0, int(queue_depth))
+        self.queue_timeout_s = queue_timeout_s
+        self._quotas = dict(quotas or {})
+        self._default_quota = default_quota
+        self._sessions: List[QuerySession] = [
+            engine.session(self.channel) for _ in range(max(1, sessions))]
+
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._queue: Deque[ServerHandle] = collections.deque()
+        self._tenants: Dict[str, _Tenant] = {}
+        self._latency = LatencyHistogram()
+        self._completed = 0
+        self._failed = 0
+        self._inflight: List[Tuple[ServerHandle, QueryHandle,
+                                   QuerySession]] = []   # scheduler-owned
+        self._inflight_n = 0      # mirrored under the lock for stats()
+        self._closing = False
+        self._abandon = False
+        self._closed = False
+        self._fatal: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._loop,
+                                        name="repro-serve", daemon=True)
+        self._thread.start()
+
+    # -- client surface ---------------------------------------------------
+
+    def submit(self, query, *, tenant: str = "default", key=None,
+               sink: Optional[pipeline.SelectionSink] = None,
+               chunk_records: Optional[int] = None) -> ServerHandle:
+        """Submit one RT/PT/JT query on behalf of `tenant`.
+
+        Returns a `ServerHandle` immediately. Raises `AdmissionError`
+        synchronously when the overflow queue is full (the client should
+        back off and retry) and `ServerClosedError` after `close()`.
+        Thread-safe — this is the concurrent-client entry point.
+        """
+        with self._cond:
+            if self._closing or self._closed:
+                raise ServerClosedError("SelectionServer is closed")
+            if self._fatal is not None:
+                raise ServerClosedError(
+                    f"SelectionServer scheduler died: {self._fatal!r}")
+            ten = self._tenant_locked(tenant)
+            room = self.max_inflight - self._inflight_n
+            if len(self._queue) >= self.queue_depth + max(0, room):
+                # Even an empty execution plane admits through the queue,
+                # so the bound is queue_depth beyond the free slots.
+                ten.stats.submitted += 1
+                ten.stats.rejected += 1
+                raise AdmissionError(
+                    f"admission queue full ({len(self._queue)} waiting, "
+                    f"{self._inflight_n}/{self.max_inflight} in flight) — "
+                    f"back off and resubmit")
+            handle = ServerHandle(query, tenant, key, sink, chunk_records)
+            if self.queue_timeout_s is not None:
+                handle._deadline = handle._t_submit + self.queue_timeout_s
+            ten.stats.submitted += 1
+            self._queue.append(handle)
+            self._cond.notify_all()
+            return handle
+
+    def stats(self) -> ServerStats:
+        """One consistent `ServerStats` snapshot (cheap; lock-guarded)."""
+        with self._lock:
+            tenants = {name: TenantStats(**vars(t.stats))
+                       for name, t in self._tenants.items()}
+            for name, t in self._tenants.items():
+                tenants[name].oracle_charged = t.ledger.charged
+            snap = ServerStats(
+                tenants=tenants,
+                queued=len(self._queue),
+                in_flight=self._inflight_n,
+                completed=self._completed,
+                failed=self._failed,
+                p50_s=self._latency.quantile(0.5),
+                p99_s=self._latency.quantile(0.99),
+                mean_s=self._latency.mean_s,
+            )
+        snap.oracle_calls = getattr(self.channel, "fn_calls", 0)
+        snap.records_labeled = getattr(self.channel, "records_labeled", 0)
+        snap.cache_hits = getattr(self.channel, "cache_hits", 0)
+        if self.bucket is not None:
+            snap.throttle_wait_s = self.bucket.wait_s
+        for sess in self._sessions:
+            snap.rounds += sess.stats.rounds
+            snap.drains += sess.stats.drains
+            snap.overlap_hidden_s += sess.stats.overlap_hidden_s
+        return snap
+
+    # -- scheduler thread -------------------------------------------------
+
+    def _tenant_locked(self, name: str) -> _Tenant:
+        ten = self._tenants.get(name)
+        if ten is None:
+            quota = self._quotas.get(name, self._default_quota)
+            ten = self._tenants[name] = _Tenant(name, quota)
+        return ten
+
+    def _expire_locked(self, now: float) -> List[ServerHandle]:
+        """Pop queued handles whose admission deadline passed."""
+        expired = []
+        while self._queue and self._queue[0]._deadline is not None \
+                and self._queue[0]._deadline <= now:
+            h = self._queue.popleft()
+            self._tenants[h.tenant].stats.timed_out += 1
+            expired.append(h)
+        return expired
+
+    def _admit_locked(self) -> List[Tuple[ServerHandle, _Tenant]]:
+        admitted = []
+        while self._queue and self._inflight_n < self.max_inflight:
+            h = self._queue.popleft()
+            ten = self._tenants[h.tenant]
+            ten.stats.admitted += 1
+            self._inflight_n += 1
+            admitted.append((h, ten))
+        return admitted
+
+    def _next_wait_locked(self) -> Optional[float]:
+        """Idle wait bound: the earliest queued admission deadline."""
+        if not self._queue or self._queue[0]._deadline is None:
+            return None
+        return max(0.0, self._queue[0]._deadline - time.monotonic())
+
+    def _loop(self) -> None:
+        try:
+            self._run_scheduler()
+        except BaseException as err:  # noqa: BLE001 — daemon must not die mute
+            with self._cond:
+                self._fatal = err
+                self._cond.notify_all()
+            self._fail_all(err)
+
+    def _run_scheduler(self) -> None:
+        while True:
+            with self._cond:
+                for h in self._expire_locked(time.monotonic()):
+                    self._finish_locked(h, error=QueueTimeoutError(
+                        f"query for tenant {h.tenant!r} waited "
+                        f"{self.queue_timeout_s}s for admission"),
+                        count=False)
+                if self._abandon:
+                    return
+                admitted = self._admit_locked()
+                if not admitted and not self._inflight:
+                    if self._closing and not self._queue:
+                        return
+                    self._cond.wait(self._next_wait_locked())
+                    continue
+            # Session work runs outside the server lock: plans touch only
+            # engine/channel state, and clients must be able to submit
+            # (and read stats) while rounds are in flight.
+            for h, ten in admitted:
+                sess = min(self._sessions, key=lambda s: s.in_flight)
+                qh = sess.submit(h.query, key=h._key, sink=h._sink,
+                                 chunk_records=h._chunk_records,
+                                 ledger_parent=ten.ledger)
+                self._inflight.append((h, qh, sess))
+            for sess in self._sessions:
+                sess.step()
+            done = [(h, qh) for h, qh, _ in self._inflight if qh.done]
+            if done:
+                self._inflight = [t for t in self._inflight
+                                  if not t[1].done]
+                with self._cond:
+                    for h, qh in done:
+                        self._inflight_n -= 1
+                        try:
+                            self._finish_locked(h, result=qh.result())
+                        except BaseException as err:  # noqa: BLE001
+                            self._finish_locked(h, error=err)
+                    self._cond.notify_all()
+
+    def _finish_locked(self, h: ServerHandle, result=None, error=None,
+                       count: bool = True) -> None:
+        latency = h._finish(result, error)
+        self._latency.record(latency)
+        if not count:
+            return
+        ten = self._tenants[h.tenant].stats
+        if error is None:
+            self._completed += 1
+            ten.completed += 1
+        else:
+            self._failed += 1
+            ten.failed += 1
+
+    def _fail_all(self, err: BaseException) -> None:
+        """Scheduler died: every accepted-but-unfinished handle must
+        still settle loudly (clients are blocked in result())."""
+        with self._cond:
+            leftovers = list(self._queue) + [h for h, _, _ in self._inflight]
+            self._queue.clear()
+            self._inflight = []
+            self._inflight_n = 0
+            for h in leftovers:
+                if not h.done:
+                    h._finish(error=ServerClosedError(
+                        f"SelectionServer scheduler died: {err!r}"))
+
+    # -- lifecycle --------------------------------------------------------
+
+    def close(self, abandon: bool = False) -> None:
+        """Shut the server down.
+
+        Default: stop admissions, serve everything already accepted
+        (queued + in flight) to completion, then release the session
+        pool, the channel's drain thread, and (when owned) the engine.
+        `abandon=True` drops unfinished work instead — their handles
+        fail with `ServerClosedError`. Idempotent.
+        """
+        with self._cond:
+            if self._closed:
+                return
+            self._closing = True
+            self._abandon = self._abandon or bool(abandon)
+            self._cond.notify_all()
+        self._thread.join()
+        with self._cond:
+            self._closed = True
+            leftovers = list(self._queue) + [h for h, _, _ in self._inflight]
+            self._queue.clear()
+            self._inflight = []
+            self._inflight_n = 0
+        for sess in self._sessions:
+            sess.close(abandon=True)   # anything left is being dropped
+        for h in leftovers:
+            if not h.done:
+                h._finish(error=ServerClosedError(
+                    "SelectionServer closed before this query ran"))
+        if self._own_channel:
+            close_channel = getattr(self.channel, "close", None)
+            if close_channel is not None:
+                close_channel()
+        if self._own_engine:
+            self.engine.close()
+
+    def __enter__(self) -> "SelectionServer":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close(abandon=exc_type is not None)
+        return False
