@@ -7,12 +7,12 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
                    (skipped silently if the dry-run artifact is absent)
 
 ``--json PATH`` additionally writes every captured row to a
-machine-readable trajectory file (CI uploads it as the BENCH_PR7.json
+machine-readable trajectory file (CI uploads it as the BENCH_PR8.json
 artifact per commit; ``--fast --json`` is the quick tier CI runs, covering
 engine cold-build at 1/4/8 workers, draw_sample throughput, the run_many
 batch, and threshold_select throughput at 1e6/1e7 records).
 ``--baseline PATH`` diffs the captured rows against a committed trajectory
-file (the repo carries ``BENCH_PR7.json``) and prints a per-row delta
+file (the repo carries ``BENCH_PR8.json``) and prints a per-row delta
 table, so every CI run shows its drift from the checked-in baseline.
 """
 from __future__ import annotations
@@ -50,7 +50,7 @@ def main() -> None:
                     help="skip the slow statistical sweeps")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write captured rows as a machine-readable "
-                         "trajectory file (e.g. BENCH_PR7.json)")
+                         "trajectory file (e.g. BENCH_PR8.json)")
     ap.add_argument("--baseline", default=None, metavar="PATH",
                     help="committed trajectory file to diff against; "
                          "prints a per-row delta table after the run")

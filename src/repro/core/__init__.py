@@ -4,6 +4,7 @@ Public API:
   SUPGQuery / run_query / run_joint_query   query semantics (Section 3)
   OracleClient / BatchingOracle             batched labeling channel +
   BudgetLedger / as_oracle_client           per-query budget views (§4.1)
+  resilience.*                              retry / timeout / breaker layer
   sampling.*                                uniform & optimal importance samplers
   thresholds.*                              Algorithms 2-5 + U-NoCI baselines
   bounds.*                                  Lemma-1 confidence bounds
@@ -21,12 +22,20 @@ from repro.core.oracle import (BatchingOracle, BudgetedOracle,
 from repro.core.queries import (JointResult, JointSUPGQuery, QueryResult,
                                 SUPGQuery, precision_of, recall_of,
                                 run_joint_query, run_query)
+from repro.core.resilience import (CircuitBreaker, CircuitOpenError,
+                                   OracleError, OracleFatalError,
+                                   OracleMalformedError, OracleTimeoutError,
+                                   OracleTransientError, RetryPolicy,
+                                   is_retryable)
 
 __all__ = [
     "bounds", "sampling", "thresholds",
     "BudgetedOracle", "BudgetExceededError", "array_oracle",
     "BatchingOracle", "BudgetLedger", "DrainHandle", "OracleClient",
     "OracleRequest", "Ticket", "as_oracle_client",
+    "CircuitBreaker", "CircuitOpenError", "OracleError", "OracleFatalError",
+    "OracleMalformedError", "OracleTimeoutError", "OracleTransientError",
+    "RetryPolicy", "is_retryable",
     "SUPGQuery", "QueryResult", "JointResult", "JointSUPGQuery",
     "run_query", "run_joint_query", "precision_of", "recall_of",
 ]

@@ -696,7 +696,9 @@ class SelectionEngine:
             as_oracle_client(oracle_fn), self.pool)
 
     def session(self, oracle_fn, *, concurrency: Optional[int] = None,
-                max_batch: Optional[int] = None) -> "QuerySession":
+                max_batch: Optional[int] = None,
+                retry=None, call_timeout_s: Optional[float] = None,
+                breaker=None) -> "QuerySession":
         """Open a `QuerySession`: the multi-query scheduler + shared
         batched-oracle channel. Use as a context manager::
 
@@ -715,9 +717,17 @@ class SelectionEngine:
         (default: unbounded — every submitted query joins the next round);
         `max_batch` caps records per underlying oracle call. Overlap
         accounting is on `session.stats` (a `SessionStats`).
+
+        `retry` (a `core.resilience.RetryPolicy`), `call_timeout_s`, and
+        `breaker` (a `core.resilience.CircuitBreaker`) configure the
+        private channel's fault tolerance when `oracle_fn` is a bare
+        callable — failed micro-batches are retried per policy, and a
+        query whose records exhaust retries fails alone while co-batched
+        queries complete. Retry accounting lands on `session.stats`.
         """
         return QuerySession(self, oracle_fn, concurrency=concurrency,
-                            max_batch=max_batch)
+                            max_batch=max_batch, retry=retry,
+                            call_timeout_s=call_timeout_s, breaker=breaker)
 
     def run_many(self, key, oracle_fn,
                  queries: Sequence[Union[SUPGQuery, JointSUPGQuery]], *,
@@ -1010,6 +1020,9 @@ class SessionStats:
     fused_walks: int = 0       # emission walks executed through fusion
     walk_spans: int = 0        # spans those walks would cost unfused
     fused_spans: int = 0       # spans the fused passes actually ran
+    retries: int = 0           # oracle calls re-attempted (resilience)
+    timeouts: int = 0          # oracle calls killed by the watchdog
+    batch_failures: int = 0    # micro-batches that exhausted retries
 
     @property
     def overlap_hidden_s(self) -> float:
@@ -1076,10 +1089,15 @@ class QuerySession:
 
     def __init__(self, engine: SelectionEngine, oracle_fn, *,
                  concurrency: Optional[int] = None,
-                 max_batch: Optional[int] = None):
+                 max_batch: Optional[int] = None,
+                 retry=None, call_timeout_s: Optional[float] = None,
+                 breaker=None):
         self.engine = engine
         self._owns_client = not isinstance(oracle_fn, OracleClient)
-        self.client = as_oracle_client(oracle_fn, max_batch=max_batch)
+        self.client = as_oracle_client(oracle_fn, max_batch=max_batch,
+                                       retry=retry,
+                                       call_timeout_s=call_timeout_s,
+                                       breaker=breaker)
         self.concurrency = (None if concurrency is None
                             else max(1, int(concurrency)))
         self.stats = SessionStats()
@@ -1237,6 +1255,9 @@ class QuerySession:
         handle.wait()
         self.stats.drain_wait_s += time.perf_counter() - t0
         self.stats.drain_busy_s += handle.duration_s
+        self.stats.retries += handle.retries
+        self.stats.timeouts += handle.timeouts
+        self.stats.batch_failures += handle.batch_failures
         for slot, ticket in pending:
             try:
                 slot[2] = ticket.result()

@@ -62,6 +62,19 @@ client plus one ledger — with the original semantics: repeat draws of the
 same record (possible under with-replacement sampling) are answered from
 the cache and do NOT consume budget, matching how a batch labeling system
 behaves.
+
+Fault tolerance (`core.resilience`): the channel treats transport
+failures exactly like budget failures — *per ticket*, never per drain.
+Each micro-batch is validated (length + finiteness; a torn or NaN
+response is rejected before caching and raised as
+`OracleMalformedError`), optionally watchdogged (`call_timeout_s` →
+`OracleTimeoutError`), retried per an injectable `RetryPolicy`
+(transient errors only), and gated by a `CircuitBreaker`. Only when a
+micro-batch exhausts its retries (or fails fatally) do the tickets
+whose records sat in that micro-batch fail — with the typed transport
+error — while co-batched tickets whose records labeled cleanly still
+resolve. Ledgers are charged per *completed* micro-batch only, and the
+shared label cache never holds unpaid or malformed labels.
 """
 from __future__ import annotations
 
@@ -69,9 +82,15 @@ import concurrent.futures
 import dataclasses
 import threading
 import time
-from typing import Callable, List, Optional, Protocol, runtime_checkable
+from typing import Callable, List, Optional, Protocol, Tuple, \
+    runtime_checkable
 
 import numpy as np
+
+from repro.core.resilience import (CircuitBreaker, CircuitOpenError,
+                                   OracleMalformedError, OracleTimeoutError,
+                                   RetryPolicy, call_with_timeout,
+                                   is_retryable)
 
 
 class BudgetExceededError(RuntimeError):
@@ -304,15 +323,23 @@ class DrainHandle:
     would trigger a useless synchronous drain of an empty pending set.
     `duration_s` is the wall time the resolve spent in flight (0.0 for
     the empty-drain fast path) — the overlap metric sessions report.
+    `retries` / `timeouts` / `batch_failures` are this drain's slice of
+    the channel's resilience counters (snapshotted under the channel
+    lock, so concurrent drains never double-count) — `SessionStats`
+    aggregates them per session.
     """
 
-    __slots__ = ("_event", "_error", "tickets", "duration_s")
+    __slots__ = ("_event", "_error", "tickets", "duration_s",
+                 "retries", "timeouts", "batch_failures")
 
     def __init__(self, tickets: int = 0):
         self._event = threading.Event()
         self._error: Optional[BaseException] = None
         self.tickets = int(tickets)
         self.duration_s = 0.0
+        self.retries = 0
+        self.timeouts = 0
+        self.batch_failures = 0
 
     def _finish(self, error: Optional[BaseException],
                 duration_s: float = 0.0) -> None:
@@ -387,7 +414,30 @@ class BatchingOracle:
     called with the micro-batch size right before each ``fn`` invocation
     (see `repro.serve.TokenBucket`), so oracle pacing composes with
     `drain_async` — a paced drain blocks on the drain thread while plan
-    compute keeps running.
+    compute keeps running. A pacer that *raises* is classified through
+    the same taxonomy as ``fn`` failures: a transient throttle error is
+    retried per policy, while `serve.RateLimitError` (a request that can
+    never fit the bucket) fails the micro-batch's tickets alone — it
+    never kills the drain, the drain thread, or co-batched tickets.
+
+    Fault tolerance (`retry` / `call_timeout_s` / `breaker` — see
+    `core.resilience`): each micro-batch invocation is validated (a
+    wrong-length or non-finite response raises `OracleMalformedError`
+    *before* anything is cached), optionally watchdogged
+    (`call_timeout_s` seconds per call, overruns raise
+    `OracleTimeoutError` and the late result is discarded), and retried
+    per `retry` while the error classifies transient — with
+    deterministic backoff on the draining thread. Only when a
+    micro-batch exhausts its attempts (or fails fatally, or the
+    `breaker` is open) do the tickets whose records were in that
+    micro-batch fail, carrying the typed error; tickets whose records
+    all labeled cleanly still resolve in the same drain, and ledgers
+    are only ever charged for completed micro-batches. The breaker
+    records one failure per exhausted micro-batch and trips open after
+    its threshold; while open, micro-batches fail fast with
+    `CircuitOpenError` until the cooldown grants a half-open probe.
+    `retries` / `timeouts` / `batch_failures` count fn re-invocations,
+    watchdog overruns, and micro-batches that ultimately failed.
 
     >>> import numpy as np
     >>> calls = []
@@ -415,9 +465,14 @@ class BatchingOracle:
 
     def __init__(self, fn: Callable[[np.ndarray], np.ndarray],
                  max_batch: Optional[int] = None,
-                 pacer: Optional[Callable[[int], object]] = None):
+                 pacer: Optional[Callable[[int], object]] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 call_timeout_s: Optional[float] = None,
+                 breaker: Optional[CircuitBreaker] = None):
         if max_batch is not None and max_batch <= 0:
             raise ValueError("max_batch must be positive")
+        if call_timeout_s is not None and call_timeout_s <= 0:
+            raise ValueError("call_timeout_s must be positive")
         self._fn = fn
         self.max_batch = max_batch
         # The rate-limiter hook on the drain path: called with the
@@ -427,6 +482,9 @@ class BatchingOracle:
         # drain thread under `drain_async`, pacing throttles the channel
         # while plan compute keeps overlapping it.
         self._pacer = pacer
+        self.retry = retry
+        self.call_timeout_s = call_timeout_s
+        self.breaker = breaker
         self._cache = _LabelCache()
         self._pending: List[Ticket] = []
         self._pending_new = 0
@@ -436,6 +494,9 @@ class BatchingOracle:
         self.fn_calls = 0
         self.records_labeled = 0
         self.cache_hits = 0
+        self.retries = 0          # fn re-invocations after transient errors
+        self.timeouts = 0         # watchdogged calls that overran the deadline
+        self.batch_failures = 0   # micro-batches that ultimately failed
 
     @property
     def cache_size(self) -> int:
@@ -510,7 +571,18 @@ class BatchingOracle:
                 err: Optional[BaseException] = None
                 try:
                     with self._lock:
-                        self._resolve_guarded(tickets)
+                        # Counter deltas are exact per drain: the whole
+                        # resolve runs under the channel lock, so no
+                        # concurrent drain can interleave its counts.
+                        before = (self.retries, self.timeouts,
+                                  self.batch_failures)
+                        try:
+                            self._resolve_guarded(tickets)
+                        finally:
+                            handle.retries = self.retries - before[0]
+                            handle.timeouts = self.timeouts - before[1]
+                            handle.batch_failures = (
+                                self.batch_failures - before[2])
                 except BaseException as e:  # noqa: BLE001 — handle carries
                     err = e
                 handle._finish(err, time.perf_counter() - t0)
@@ -522,12 +594,18 @@ class BatchingOracle:
         return handle
 
     def close(self) -> None:
-        """Reap the drain thread (if `drain_async` ever created one).
-        Safe to call multiple times; the client stays usable for
-        synchronous submit/drain afterwards."""
-        with self._lock:
-            worker, self._drain_worker = self._drain_worker, None
-        if worker is not None:
+        """Reap the drain thread (if `drain_async` ever created one),
+        waiting for any in-flight `drain_async` resolve to settle its
+        `DrainHandle` first. Loops because a concurrent `drain_async`
+        may install a fresh worker after we popped the old one — close
+        must reap that one too, or its thread leaks. Safe to call
+        multiple times; the client stays usable for synchronous
+        submit/drain afterwards."""
+        while True:
+            with self._lock:
+                worker, self._drain_worker = self._drain_worker, None
+            if worker is None:
+                return
             worker.shutdown(wait=True)
 
     def _resolve(self, tickets: List[Ticket]) -> None:
@@ -563,18 +641,21 @@ class BatchingOracle:
             claims.append((t, new))
             claimed = np.union1d(claimed, new)
         # 2. label the surviving union in sorted micro-batches <= max_batch,
-        #    charging each ledger the moment fn is invoked for its claims:
-        #    if a later micro-batch fails, the records already labeled
-        #    (and cached) stay paid for — real oracle usage can never
-        #    exceed the sum of what the ledgers were charged.
+        #    charging each ledger the moment a micro-batch *completes*:
+        #    if a micro-batch fails (retries exhausted / fatal / circuit
+        #    open), the records already labeled (and cached) stay paid
+        #    for, the failed chunk is never charged, and the remaining
+        #    chunks still run — real oracle usage can never exceed the
+        #    sum of what the ledgers were charged.
+        failed: List[Tuple[np.ndarray, BaseException]] = []
         step = self.max_batch or max(int(claimed.size), 1)
         for start in range(0, int(claimed.size), step):
             chunk = claimed[start:start + step]
-            if self._pacer is not None:
-                self._pacer(int(chunk.size))
-            labels = np.asarray(self._fn(chunk), np.float32).reshape(-1)
-            if labels.shape[0] != chunk.shape[0]:
-                raise ValueError("oracle returned wrong number of labels")
+            try:
+                labels = self._label_chunk(chunk)
+            except BaseException as err:  # noqa: BLE001 — fail-alone below
+                failed.append((chunk, err))
+                continue
             self.fn_calls += 1
             self.records_labeled += int(chunk.size)
             self._cache.insert(chunk, labels)
@@ -584,25 +665,104 @@ class BatchingOracle:
                     hi = np.searchsorted(new, chunk[-1], side="right")
                     if hi > lo:
                         t.ledger.charge(hi - lo)
-        # 3. resolve (charges landed per micro-batch above).
+        # 3. resolve. A ticket with any record still unlabeled owned a
+        #    failed micro-batch (the cache holds every completed chunk),
+        #    so it fails alone with that chunk's error; co-batched
+        #    tickets whose records all landed resolve normally.
         for t, new in claims:
             labels, known = self._cache.lookup(t.indices)
-            assert known.all()
+            if not bool(known.all()):
+                err = next(
+                    (e for ch, e in failed if np.isin(t.indices, ch).any()),
+                    failed[0][1] if failed else
+                    RuntimeError("oracle drain lost labels"))
+                t._error, t._done = err, True
+                continue
             if t.ledger is not None:
                 t.ledger.record(t.indices, labels)
             t._labels, t._done = labels, True
 
+    def _label_chunk(self, chunk: np.ndarray) -> np.ndarray:
+        """Label one micro-batch through the resilience stack: circuit
+        check -> pacer -> (watchdogged) `fn` -> shape/finiteness
+        validation, retried per `self.retry` with deterministic
+        per-chunk backoff. Raises the final error once attempts are
+        exhausted, the error is fatal, or the circuit is open; callers
+        (`_resolve`) translate that into fail-alone ticket poisoning."""
+        policy = self.retry
+        attempts = policy.max_attempts if policy is not None else 1
+        salt = int(chunk[0]) if chunk.size else 0
+        attempt = 1
+        while True:
+            try:
+                if self.breaker is not None and not self.breaker.allow():
+                    raise CircuitOpenError(
+                        "oracle circuit open — shedding micro-batch",
+                        retry_after_s=self.breaker.retry_after_s())
+                if self._pacer is not None:
+                    self._pacer(int(chunk.size))
+                if self.call_timeout_s is not None:
+                    labels = call_with_timeout(
+                        self._fn, chunk, self.call_timeout_s)
+                else:
+                    labels = self._fn(chunk)
+                labels = np.asarray(labels, np.float32).reshape(-1)
+                if labels.shape[0] != chunk.shape[0]:
+                    raise OracleMalformedError(
+                        "oracle returned wrong number of labels "
+                        f"({labels.shape[0]} for {chunk.shape[0]} records)")
+                if not bool(np.isfinite(labels).all()):
+                    raise OracleMalformedError(
+                        "oracle returned non-finite labels")
+            except BaseException as err:  # noqa: BLE001 — classified below
+                if isinstance(err, OracleTimeoutError):
+                    self.timeouts += 1
+                if isinstance(err, CircuitOpenError):
+                    # Not a channel failure — the breaker already shed
+                    # it; recording a failure would double-count.
+                    self.batch_failures += 1
+                    raise
+                retryable = (policy.retryable(err) if policy is not None
+                             else is_retryable(err))
+                if not retryable or attempt >= attempts:
+                    self.batch_failures += 1
+                    if self.breaker is not None:
+                        self.breaker.record_failure()
+                    raise
+                self.retries += 1
+                policy.sleep(policy.backoff_s(attempt, salt))
+                attempt += 1
+                continue
+            if self.breaker is not None:
+                self.breaker.record_success()
+            return labels
+
 
 def as_oracle_client(oracle,
-                     max_batch: Optional[int] = None) -> OracleClient:
+                     max_batch: Optional[int] = None,
+                     retry: Optional[RetryPolicy] = None,
+                     call_timeout_s: Optional[float] = None,
+                     breaker: Optional[CircuitBreaker] = None,
+                     ) -> OracleClient:
     """Adapter: pass `OracleClient`s through, wrap plain ``indices ->
     labels`` callables in a private `BatchingOracle` — the shim that keeps
     bare callables working across `run`, `run_joint`, `run_many`,
-    `queries.run_query`, and `SelectionEngine.session()`."""
+    `queries.run_query`, and `SelectionEngine.session()`. The resilience
+    kwargs (`retry`, `call_timeout_s`, `breaker`) configure the private
+    channel; passing any of them alongside a ready-made `OracleClient`
+    is an error — configure that client directly instead."""
     if isinstance(oracle, OracleClient):
+        if retry is not None or call_timeout_s is not None \
+                or breaker is not None:
+            raise ValueError(
+                "retry/call_timeout_s/breaker apply to the private "
+                "channel wrapped around a bare callable; configure "
+                "your OracleClient directly instead")
         return oracle
     if callable(oracle):
-        return BatchingOracle(oracle, max_batch=max_batch)
+        return BatchingOracle(oracle, max_batch=max_batch, retry=retry,
+                              call_timeout_s=call_timeout_s,
+                              breaker=breaker)
     raise TypeError(
         f"oracle must be an OracleClient or an indices->labels callable, "
         f"got {type(oracle).__name__}")

@@ -7,6 +7,8 @@ and `TokenBucket` pacing of the shared oracle channel. See
 `docs/architecture.md` for where this sits in the stack.
 """
 from repro.core.oracle import BudgetExceededError
+from repro.core.resilience import (CircuitBreaker, CircuitOpenError,
+                                   RetryPolicy)
 from repro.serve.limiter import RateLimitError, TokenBucket
 from repro.serve.server import (AdmissionError, QueueTimeoutError,
                                 SelectionServer, ServerClosedError,
@@ -25,4 +27,7 @@ __all__ = [
     "QueueTimeoutError",
     "ServerClosedError",
     "BudgetExceededError",
+    "CircuitBreaker",
+    "CircuitOpenError",
+    "RetryPolicy",
 ]

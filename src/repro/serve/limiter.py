@@ -41,7 +41,15 @@ from typing import Callable
 
 
 class RateLimitError(RuntimeError):
-    """A single acquire exceeds the bucket's capacity (can never succeed)."""
+    """A single acquire exceeds the bucket's capacity (can never succeed).
+
+    `retryable` is False: `core.resilience.is_retryable` duck-types this
+    attribute, so a channel's retry loop fails the micro-batch alone
+    (poisoning only its owners) instead of re-running an acquire that
+    can never be granted.
+    """
+
+    retryable = False
 
 
 # Grant tolerance: refill arithmetic (`(now - last) * rate`) leaves float

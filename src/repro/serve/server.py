@@ -45,6 +45,8 @@ from typing import Deque, Dict, List, Optional, Tuple
 from repro.core.engine import (QueryHandle, QuerySession, SelectionEngine,
                                ShardedSelection)
 from repro.core.oracle import BatchingOracle, BudgetLedger, OracleClient
+from repro.core.resilience import (CircuitBreaker, CircuitOpenError,
+                                   RetryPolicy)
 from repro.data import pipeline
 from repro.serve.limiter import TokenBucket
 from repro.serve.stats import LatencyHistogram, ServerStats, TenantStats
@@ -147,6 +149,13 @@ class SelectionServer:
     rate, burst: `TokenBucket` pacing of the oracle channel, in records
         per second and records of burst capacity (None = unpaced).
     max_batch: records per underlying oracle call (see `BatchingOracle`).
+    retry, call_timeout_s, breaker: the channel's fault-tolerance stack
+        (`RetryPolicy`, per-call watchdog seconds, `CircuitBreaker` —
+        see `core.resilience`). While the circuit is open, `submit`
+        sheds new admissions with `CircuitOpenError` (carrying a
+        retry-after hint) instead of queueing work that will die; the
+        half-open probe is left to the drain path, so shedding never
+        delays recovery.
     quotas: tenant name -> total oracle-label quota (a `BudgetLedger`
         each query of that tenant chains under). Unknown tenants get
         `default_quota` (None = unmetered).
@@ -160,6 +169,9 @@ class SelectionServer:
                  rate: Optional[float] = None,
                  burst: Optional[float] = None,
                  max_batch: Optional[int] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 call_timeout_s: Optional[float] = None,
+                 breaker: Optional[CircuitBreaker] = None,
                  quotas: Optional[Dict[str, int]] = None,
                  default_quota: Optional[int] = None,
                  sessions: int = 1,
@@ -168,13 +180,19 @@ class SelectionServer:
         self._own_engine = bool(own_engine)
         self.bucket: Optional[TokenBucket] = None
         if isinstance(oracle_fn, OracleClient):
-            if rate is not None or burst is not None or max_batch is not None:
+            if rate is not None or burst is not None or max_batch is not None \
+                    or retry is not None or call_timeout_s is not None \
+                    or breaker is not None:
                 raise ValueError(
-                    "rate/burst/max_batch configure the server's own "
-                    "channel; an externally-owned OracleClient carries "
-                    "its own configuration")
+                    "rate/burst/max_batch/retry/call_timeout_s/breaker "
+                    "configure the server's own channel; an "
+                    "externally-owned OracleClient carries its own "
+                    "configuration")
             self.channel = oracle_fn
             self._own_channel = False
+            # Admission shedding still works with an external channel
+            # that carries its own breaker.
+            self.breaker = getattr(oracle_fn, "breaker", None)
         else:
             if rate is not None:
                 self.bucket = TokenBucket(rate,
@@ -182,8 +200,11 @@ class SelectionServer:
             elif burst is not None:
                 raise ValueError("burst requires rate")
             self.channel = BatchingOracle(oracle_fn, max_batch=max_batch,
-                                          pacer=self.bucket)
+                                          pacer=self.bucket, retry=retry,
+                                          call_timeout_s=call_timeout_s,
+                                          breaker=breaker)
             self._own_channel = True
+            self.breaker = breaker
         self.max_inflight = max(1, int(max_inflight))
         self.queue_depth = max(0, int(queue_depth))
         self.queue_timeout_s = queue_timeout_s
@@ -219,8 +240,10 @@ class SelectionServer:
 
         Returns a `ServerHandle` immediately. Raises `AdmissionError`
         synchronously when the overflow queue is full (the client should
-        back off and retry) and `ServerClosedError` after `close()`.
-        Thread-safe — this is the concurrent-client entry point.
+        back off and retry), `CircuitOpenError` while the oracle circuit
+        is open (graceful degradation — the error carries a retry-after
+        hint), and `ServerClosedError` after `close()`. Thread-safe —
+        this is the concurrent-client entry point.
         """
         with self._cond:
             if self._closing or self._closed:
@@ -229,6 +252,17 @@ class SelectionServer:
                 raise ServerClosedError(
                     f"SelectionServer scheduler died: {self._fatal!r}")
             ten = self._tenant_locked(tenant)
+            if self.breaker is not None:
+                # Non-mutating probe: retry_after_s() never consumes the
+                # half-open slot, so admission shedding cannot starve
+                # the drain path's recovery probe.
+                retry_after = self.breaker.retry_after_s()
+                if retry_after > 0.0:
+                    ten.stats.submitted += 1
+                    ten.stats.shed += 1
+                    raise CircuitOpenError(
+                        f"oracle circuit open — retry in "
+                        f"{retry_after:.1f}s", retry_after_s=retry_after)
             room = self.max_inflight - self._inflight_n
             if len(self._queue) >= self.queue_depth + max(0, room):
                 # Even an empty execution plane admits through the queue,
@@ -267,6 +301,12 @@ class SelectionServer:
         snap.oracle_calls = getattr(self.channel, "fn_calls", 0)
         snap.records_labeled = getattr(self.channel, "records_labeled", 0)
         snap.cache_hits = getattr(self.channel, "cache_hits", 0)
+        snap.retries = getattr(self.channel, "retries", 0)
+        snap.timeouts = getattr(self.channel, "timeouts", 0)
+        snap.batch_failures = getattr(self.channel, "batch_failures", 0)
+        if self.breaker is not None:
+            snap.circuit_state = self.breaker.state
+            snap.circuit_opens = self.breaker.opens
         if self.bucket is not None:
             snap.throttle_wait_s = self.bucket.wait_s
         for sess in self._sessions:

@@ -85,6 +85,7 @@ class TenantStats:
     submitted: int = 0               # submit() calls accepted into the plane
     admitted: int = 0                # entered a session (left the queue)
     rejected: int = 0                # refused at submit (overflow queue full)
+    shed: int = 0                    # refused at submit (circuit open)
     timed_out: int = 0               # expired waiting in the overflow queue
     completed: int = 0               # finished with a result
     failed: int = 0                  # finished with an error (budget/quota/..)
@@ -93,7 +94,7 @@ class TenantStats:
     @property
     def in_flight(self) -> int:
         """Accepted queries not yet finished."""
-        return self.submitted - self.rejected - self.timed_out \
+        return self.submitted - self.rejected - self.shed - self.timed_out \
             - self.completed - self.failed
 
 
@@ -103,7 +104,9 @@ class ServerStats:
 
     `tenants` maps tenant name to its `TenantStats`; the scalar fields
     aggregate the channel (`oracle_calls`, `records_labeled`,
-    `cache_hits`, `throttle_wait_s`), the session pool's scheduler
+    `cache_hits`, `throttle_wait_s`), the channel's resilience layer
+    (`retries`, `timeouts`, `batch_failures`, plus the breaker's
+    `circuit_state`/`circuit_opens`), the session pool's scheduler
     accounting (`rounds`, `drains`, `overlap_hidden_s`), and end-to-end
     query latency (`p50_s`/`p99_s`, measured submit -> result-ready,
     queue wait included).
@@ -124,6 +127,11 @@ class ServerStats:
     p50_s: float = 0.0
     p99_s: float = 0.0
     mean_s: float = 0.0
+    retries: int = 0                 # oracle calls re-attempted
+    timeouts: int = 0                # oracle calls killed by the watchdog
+    batch_failures: int = 0          # micro-batches that exhausted retries
+    circuit_state: str = "closed"    # breaker state at snapshot time
+    circuit_opens: int = 0           # closed -> open transitions so far
 
     @property
     def admitted(self) -> int:
@@ -134,6 +142,11 @@ class ServerStats:
     def rejected(self) -> int:
         """Total queries rejected at submit across tenants."""
         return sum(t.rejected for t in self.tenants.values())
+
+    @property
+    def circuit_shed(self) -> int:
+        """Total admissions refused because the circuit was open."""
+        return sum(t.shed for t in self.tenants.values())
 
     @property
     def timed_out(self) -> int:
@@ -157,6 +170,10 @@ class ServerStats:
             f"session: {self.rounds} rounds, {self.drains} drains, "
             f"{self.overlap_hidden_s * 1e3:.1f} ms oracle latency "
             f"hidden under compute",
+            f"resilience: {self.retries} retries, {self.timeouts} "
+            f"timeouts, {self.batch_failures} failed micro-batches, "
+            f"circuit {self.circuit_state} "
+            f"({self.circuit_opens} opens, {self.circuit_shed} shed)",
         ]
         for name in sorted(self.tenants):
             t = self.tenants[name]
@@ -165,5 +182,5 @@ class ServerStats:
             lines.append(
                 f"tenant {name!r}: {t.completed}/{t.submitted} completed "
                 f"({t.failed} failed, {t.rejected} rejected, "
-                f"{t.timed_out} timed out), {quota}")
+                f"{t.shed} shed, {t.timed_out} timed out), {quota}")
         return "\n".join(lines)

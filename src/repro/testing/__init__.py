@@ -1,0 +1,9 @@
+"""Test/benchmark harnesses that are product surface, not test code.
+
+`repro.testing.faults` carries the deterministic `FaultInjector` used by
+the resilience tests, the chaos acceptance tests, and the faulty-load
+benchmark rows — anything that needs a reproducibly unreliable oracle.
+"""
+from repro.testing.faults import FaultInjector, fault_schedule
+
+__all__ = ["FaultInjector", "fault_schedule"]

@@ -16,10 +16,12 @@ DOC_FILES = sorted(str(p.relative_to(ROOT))
 DOC_MODULES = [
     "repro.core.engine",
     "repro.core.oracle",
+    "repro.core.resilience",
     "repro.data.pipeline",
     "repro.serve.limiter",
     "repro.serve.stats",
     "repro.serve.server",
+    "repro.testing.faults",
 ]
 
 

@@ -79,10 +79,11 @@ def test_ticket_result_drains_implicitly():
 def test_oracle_wrong_label_count_poisons_drain():
     client = BatchingOracle(lambda idx: np.zeros(len(idx) + 1))
     t = client.submit([1, 2], ledger=BudgetLedger(10))
-    with pytest.raises(ValueError, match="wrong number"):
-        client.drain()
+    client.drain()      # drains no longer raise: the ticket fails alone
     with pytest.raises(ValueError, match="wrong number"):
         t.result()
+    assert client.batch_failures == 1
+    assert client.cache_size == 0   # malformed labels are never cached
 
 
 # -- per-query enforcement inside a coalesced drain ---------------------------
@@ -239,10 +240,12 @@ def test_mid_drain_failure_charges_completed_micro_batches():
 
     client = BatchingOracle(fn, max_batch=2)
     ledger = BudgetLedger(10)
-    with pytest.raises(IOError):            # submit-time auto-drain fires
-        client.submit([1, 2, 3, 4, 5], ledger=ledger)
-    # chunk {1,2} was labeled (and cached) before the failure: it is paid
-    assert ledger.charged == 2 == client.records_labeled
+    # submit-time auto-drain fires; the failed chunk {3,4} poisons the
+    # ticket (fail-alone) while chunks {1,2} and {5} complete and stay paid
+    t0 = client.submit([1, 2, 3, 4, 5], ledger=ledger)
+    with pytest.raises(IOError):
+        t0.result()
+    assert ledger.charged == 3 == client.records_labeled
     # the retry pays only for what was never labeled
     t = client.submit([1, 2, 3, 4, 5], ledger=ledger)
     np.testing.assert_array_equal(t.result(), 0.0)
@@ -304,15 +307,16 @@ def test_drain_async_snapshot_excludes_later_submits():
 
 
 def test_drain_async_poisoning_parity_with_sync_drain():
-    """A mid-drain failure surfaces on handle.result() AND poisons the
-    snapshot's tickets — identical semantics to the sync drain, just
-    delivered through the handle."""
+    """A mid-drain failure poisons the snapshot's tickets — identical
+    semantics to the sync drain: the handle settles cleanly (fail-alone
+    means drains never raise for transport errors) while each owning
+    ticket carries the typed error."""
     client = BatchingOracle(lambda idx: np.zeros(len(idx) + 1))
     t = client.submit([1, 2], ledger=BudgetLedger(10))
     handle = client.drain_async()
-    assert isinstance(handle.exception(), ValueError)
-    with pytest.raises(ValueError, match="wrong number"):
-        handle.result()
+    handle.wait()
+    assert handle.exception() is None
+    assert handle.batch_failures == 1
     with pytest.raises(ValueError, match="wrong number"):
         t.result()
     # the channel itself is not wedged: a clean retry still works

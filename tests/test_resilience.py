@@ -1,0 +1,524 @@
+"""Fault tolerance: retry policy, circuit breaker, watchdog, fail-alone
+transport poisoning, pacer-error taxonomy, close/drain races, and the
+acceptance criterion — faulty runs are bit-for-bit the fault-free runs."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.engine import SelectionEngine
+from repro.core.oracle import BatchingOracle, BudgetLedger, array_oracle
+from repro.core.queries import JointSUPGQuery, SUPGQuery
+from repro.core.resilience import (CircuitBreaker, CircuitOpenError,
+                                   OracleFatalError, OracleMalformedError,
+                                   OracleTimeoutError, OracleTransientError,
+                                   RetryPolicy, call_with_timeout,
+                                   is_retryable)
+from repro.data.synthetic import make_beta
+from repro.serve import SelectionServer, ServerClosedError, TokenBucket
+from repro.serve.limiter import RateLimitError
+from repro.testing import FaultInjector, fault_schedule
+
+
+def _nosleep_policy(**kw):
+    kw.setdefault("max_attempts", 5)
+    kw.setdefault("base_delay_s", 0.0)
+    kw.setdefault("sleep", lambda s: None)
+    return RetryPolicy(**kw)
+
+
+def _dataset(n=50_000, seed=12):
+    ds = make_beta(n, 0.02, 1.0, seed=seed)
+    return ds, array_oracle(ds.labels)
+
+
+def _engine(ds, shards=4):
+    return SelectionEngine(np.array_split(ds.scores, shards),
+                           num_bins=1024, use_kernel=False)
+
+
+def _batch():
+    return [
+        SUPGQuery(target="recall", gamma=0.9, budget=2000, method="is"),
+        SUPGQuery(target="precision", gamma=0.8, budget=2000, method="is"),
+        JointSUPGQuery(gamma_recall=0.8, stage_budget=2000),
+        SUPGQuery(target="recall", gamma=0.85, budget=1500,
+                  method="uniform"),
+    ]
+
+
+# -- RetryPolicy --------------------------------------------------------------
+
+def test_retry_policy_backoff_deterministic_and_bounded():
+    p = RetryPolicy(max_attempts=6, base_delay_s=0.1, multiplier=2.0,
+                    max_delay_s=0.5, jitter=0.25, seed=3)
+    seq = [p.backoff_s(a, salt=42) for a in range(1, 6)]
+    assert seq == [p.backoff_s(a, salt=42) for a in range(1, 6)]  # pure
+    for a, d in enumerate(seq, start=1):
+        raw = min(0.5, 0.1 * 2.0 ** (a - 1))
+        assert raw * 0.75 <= d <= raw         # jitter only shrinks
+    # different salts decorrelate concurrent micro-batches
+    assert p.backoff_s(2, salt=1) != p.backoff_s(2, salt=2)
+    # zero jitter is exactly exponential, capped
+    q = RetryPolicy(base_delay_s=0.1, jitter=0.0, max_delay_s=0.25)
+    assert [q.backoff_s(a) for a in (1, 2, 3, 4)] == [0.1, 0.2, 0.25, 0.25]
+
+
+def test_retry_policy_validates_knobs():
+    with pytest.raises(ValueError, match="max_attempts"):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError, match="jitter"):
+        RetryPolicy(jitter=1.5)
+    with pytest.raises(ValueError, match="delays"):
+        RetryPolicy(base_delay_s=-1.0)
+
+
+def test_taxonomy_classification():
+    assert is_retryable(OracleTransientError("5xx"))
+    assert is_retryable(OracleTimeoutError("slow"))
+    assert is_retryable(OracleMalformedError("torn"))
+    assert not is_retryable(OracleFatalError("rejected"))
+    assert not is_retryable(CircuitOpenError("open"))
+    assert not is_retryable(RateLimitError("over capacity"))
+    # builtin transport errors are transient; logic errors are not
+    assert is_retryable(ConnectionResetError())
+    assert is_retryable(TimeoutError())
+    assert not is_retryable(ValueError("bug"))
+    # an explicit retryable attribute wins over the heuristics
+    err = ValueError("flaky wire format")
+    err.retryable = True
+    assert is_retryable(err)
+    assert isinstance(OracleMalformedError("x"), ValueError)  # back-compat
+
+
+# -- CircuitBreaker -----------------------------------------------------------
+
+def test_breaker_full_state_machine_with_fake_clock():
+    t = [0.0]
+    br = CircuitBreaker(failure_threshold=3, reset_timeout_s=10.0,
+                        clock=lambda: t[0])
+    assert br.state == "closed" and br.allow()
+    br.record_failure()
+    br.record_failure()
+    br.record_success()                    # success resets the streak
+    br.record_failure()
+    br.record_failure()
+    assert br.state == "closed"
+    br.record_failure()                    # third consecutive: trips
+    assert br.state == "open" and br.opens == 1
+    assert not br.allow()
+    assert br.retry_after_s() == pytest.approx(10.0)
+    t[0] = 6.0
+    assert br.retry_after_s() == pytest.approx(4.0)
+    t[0] = 10.0
+    assert br.allow() and br.state == "half-open"   # the one probe
+    assert not br.allow()                  # probe already granted
+    br.record_failure()                    # failed probe: re-open
+    assert br.state == "open" and br.opens == 2
+    t[0] = 20.0
+    assert br.allow()
+    br.record_success()                    # healed
+    assert br.state == "closed" and br.closes == 1
+    assert br.probes == 2 and br.rejections >= 2
+
+
+# -- watchdog -----------------------------------------------------------------
+
+def test_call_with_timeout_passes_and_kills():
+    assert call_with_timeout(lambda x: x * 2, 21, timeout_s=5.0) == 42
+    release = threading.Event()
+
+    def stuck(_):
+        release.wait(30)
+        return "late"
+
+    with pytest.raises(OracleTimeoutError, match="deadline"):
+        call_with_timeout(stuck, [1, 2], timeout_s=0.05)
+    release.set()
+    # errors inside fn propagate as themselves, not as timeouts
+    with pytest.raises(KeyError):
+        call_with_timeout(lambda _: {}["missing"], None, timeout_s=5.0)
+
+
+def test_channel_watchdog_times_out_then_retry_succeeds():
+    """A latency spike beyond call_timeout_s raises OracleTimeoutError,
+    which is transient: the retry answers and the late result of the
+    abandoned call never corrupts anything."""
+    ds = np.arange(32.0)
+    inj = FaultInjector(array_oracle(ds), {0: "latency"}, spike_s=0.5)
+    client = BatchingOracle(inj, retry=_nosleep_policy(),
+                            call_timeout_s=0.1)
+    t = client.submit([3, 4], ledger=BudgetLedger(10))
+    np.testing.assert_array_equal(t.result(), [3.0, 4.0])
+    assert client.timeouts == 1 and client.retries == 1
+    assert inj.calls == 2
+
+
+# -- retries inside the drain -------------------------------------------------
+
+def test_transient_faults_retried_labels_cached_once():
+    inj = FaultInjector(array_oracle(np.arange(64.0)),
+                        {0: "transient", 1: "transient"})
+    client = BatchingOracle(inj, retry=_nosleep_policy())
+    led = BudgetLedger(32)
+    t = client.submit([5, 6, 7], ledger=led)
+    np.testing.assert_array_equal(t.result(), [5.0, 6.0, 7.0])
+    assert client.retries == 2 and client.fn_calls == 1
+    assert led.charged == 3                # charged once, not per attempt
+
+
+@pytest.mark.parametrize("kind", ["torn", "dup", "nan"])
+def test_malformed_batches_rejected_retried_never_cached(kind):
+    """Wrong-length and non-finite responses are validation failures:
+    retried like transients, and the bad labels must never reach the
+    shared cache (a later cache hit would silently corrupt a query)."""
+    inj = FaultInjector(array_oracle(np.arange(64.0)), {0: kind})
+    client = BatchingOracle(inj, retry=_nosleep_policy())
+    t = client.submit([8, 9], ledger=BudgetLedger(10))
+    np.testing.assert_array_equal(t.result(), [8.0, 9.0])
+    assert client.retries == 1
+    assert client.cache_size == 2          # only the clean labels landed
+    labels, known = client._cache.lookup(np.asarray([8, 9]))
+    assert known.all() and np.isfinite(labels).all()
+
+
+def test_exhausted_retries_fail_only_owning_tickets():
+    """The chaos acceptance test: with max_batch=2, tickets A=[1,2] and
+    B=[3,4] coalesce into two micro-batches. The schedule faults B's
+    chunk through every attempt; A completes with its labels and its
+    charge, B fails alone with the typed error, and the failed chunk is
+    neither charged nor cached."""
+    schedule = {1: "transient", 2: "transient"}   # calls 1,2 = chunk {3,4}
+    inj = FaultInjector(array_oracle(np.arange(64.0)), schedule)
+    client = BatchingOracle(inj, max_batch=2,
+                            retry=_nosleep_policy(max_attempts=2))
+    la, lb = BudgetLedger(10), BudgetLedger(10)
+    ta = client.submit([1, 2], ledger=la)
+    tb = client.submit([3, 4], ledger=lb)
+    client.drain()
+    np.testing.assert_array_equal(ta.result(), [1.0, 2.0])
+    with pytest.raises(OracleTransientError, match="injected"):
+        tb.result()
+    assert la.charged == 2 and lb.charged == 0
+    assert client.cache_size == 2          # {1,2} only
+    assert client.retries == 1             # one re-attempt before exhaustion
+    assert client.batch_failures == 1
+    # the channel is not wedged: B's records label fine on resubmit
+    tb2 = client.submit([3, 4], ledger=lb)
+    np.testing.assert_array_equal(tb2.result(), [3.0, 4.0])
+    assert lb.charged == 2
+
+
+def test_shared_record_failure_poisons_both_owners():
+    """Two tickets sharing a record in the failed micro-batch both fail
+    (the record's labels never arrived for either); a later ticket with
+    disjoint records labels cleanly — the channel is not wedged."""
+    inj = FaultInjector(array_oracle(np.arange(64.0)),
+                        {0: "fatal"})                # chunk {2} fails
+    client = BatchingOracle(inj, max_batch=2, retry=_nosleep_policy())
+    la, lb, lc = BudgetLedger(10), BudgetLedger(10), BudgetLedger(10)
+    ta = client.submit([2], ledger=la)
+    tb = client.submit([2], ledger=lb)     # shares record 2; auto-drains
+    with pytest.raises(OracleFatalError):
+        ta.result()
+    with pytest.raises(OracleFatalError):
+        tb.result()
+    tc = client.submit([5, 6], ledger=lc)  # disjoint, clean call
+    np.testing.assert_array_equal(tc.result(), [5.0, 6.0])
+    assert la.charged == lb.charged == 0 and lc.charged == 2
+    assert client.retries == 0             # fatal = never retried
+    assert client.cache_size == 2          # the failed record never cached
+
+
+def test_breaker_trips_channel_and_sheds_then_heals():
+    """Consecutive exhausted micro-batches trip the breaker; while open,
+    drains shed with CircuitOpenError without invoking the oracle; after
+    the cooldown the half-open probe heals it."""
+    t = [0.0]
+    br = CircuitBreaker(failure_threshold=2, reset_timeout_s=5.0,
+                        clock=lambda: t[0])
+    inj = FaultInjector(array_oracle(np.arange(64.0)),
+                        {0: "fatal", 1: "fatal"})
+    client = BatchingOracle(inj, max_batch=2, breaker=br)
+    led = BudgetLedger(32)
+    t1 = client.submit([1, 2], ledger=led)
+    t2 = client.submit([3, 4], ledger=led)
+    client.drain()
+    for tick in (t1, t2):
+        with pytest.raises(OracleFatalError):
+            tick.result()
+    assert br.state == "open"
+    calls_before = inj.calls
+    t3 = client.submit([5, 6], ledger=led)
+    client.drain()
+    with pytest.raises(CircuitOpenError) as ei:
+        t3.result()
+    assert ei.value.retry_after_s > 0.0
+    assert inj.calls == calls_before       # shed without touching the oracle
+    t[0] = 6.0                             # cooldown elapsed: probe allowed
+    t4 = client.submit([7, 8], ledger=led)
+    np.testing.assert_array_equal(t4.result(), [7.0, 8.0])
+    assert br.state == "closed" and br.closes == 1
+
+
+# -- pacer taxonomy (satellite) -----------------------------------------------
+
+def test_pacer_rate_limit_error_fails_tickets_not_drain_worker():
+    """A zero-capacity bucket rejects every nonzero acquire; the typed
+    RateLimitError is fatal (retryable=False), so the micro-batch fails
+    alone instead of spinning retries, and the async drain worker
+    survives to serve later drains."""
+    bucket = TokenBucket(rate=5.0, burst=0)
+    client = BatchingOracle(array_oracle(np.arange(16.0)), pacer=bucket,
+                            retry=_nosleep_policy())
+    t = client.submit([1, 2], ledger=BudgetLedger(10))
+    handle = client.drain_async()
+    handle.wait()
+    assert handle.exception() is None      # worker survived
+    with pytest.raises(RateLimitError):
+        t.result()
+    assert client.retries == 0 and client.batch_failures == 1
+    # the worker still drains cleanly after the failure
+    client._pacer = None
+    t2 = client.submit([3], ledger=BudgetLedger(10))
+    client.drain_async().wait()
+    np.testing.assert_array_equal(t2.result(), [3.0])
+    client.close()
+
+
+def test_pacer_transient_error_is_retried():
+    """A pacer that blips (transient) is re-run on the next attempt —
+    pacing errors go through the same taxonomy as oracle errors."""
+    calls = [0]
+
+    def flaky_pacer(n):
+        calls[0] += 1
+        if calls[0] == 1:
+            raise ConnectionResetError("limiter hiccup")
+
+    client = BatchingOracle(array_oracle(np.arange(16.0)),
+                            pacer=flaky_pacer, retry=_nosleep_policy())
+    t = client.submit([4, 5], ledger=BudgetLedger(10))
+    np.testing.assert_array_equal(t.result(), [4.0, 5.0])
+    assert calls[0] == 2 and client.retries == 1
+
+
+# -- close / drain_async race (satellite) -------------------------------------
+
+def test_close_waits_for_inflight_drain_async():
+    """close() must not reap the drain worker under an in-flight
+    drain_async: the handle settles (tickets resolved), no thread leaks,
+    even when a concurrent drain_async installs a fresh worker."""
+    gate = threading.Event()
+    labels = np.arange(32.0)
+
+    def slow_fn(idx):
+        gate.wait(30)
+        return labels[np.asarray(idx)]
+
+    before = set(threading.enumerate())
+    client = BatchingOracle(slow_fn)
+    led = BudgetLedger(32)
+    t1 = client.submit([1, 2], ledger=led)
+    handle = client.drain_async()
+    closer = threading.Thread(target=client.close)
+    closer.start()
+    time.sleep(0.05)                       # let close() reach the join
+    gate.set()
+    closer.join(timeout=30)
+    assert not closer.is_alive()
+    assert handle.done and handle.exception() is None
+    np.testing.assert_array_equal(t1.result(), [1.0, 2.0])
+    deadline = time.monotonic() + 10
+    while set(threading.enumerate()) - before:
+        assert time.monotonic() < deadline, (
+            f"leaked threads: {set(threading.enumerate()) - before}")
+        time.sleep(0.01)
+
+
+# -- session + stats surfacing ------------------------------------------------
+
+def test_session_surfaces_retry_stats():
+    ds, oracle = _dataset(20_000)
+    inj = FaultInjector(oracle, {0: "transient", 3: "transient"})
+    q = SUPGQuery(target="recall", gamma=0.9, budget=1000, method="is")
+    with _engine(ds, shards=2) as engine:
+        with engine.session(inj, retry=_nosleep_policy()) as sess:
+            h = sess.submit(q, key=jax.random.PRNGKey(0))
+            assert h.result().total_selected >= 0
+            assert sess.stats.retries == sess.client.retries >= 1
+            assert sess.stats.batch_failures == 0
+
+
+# -- acceptance: faulty == fault-free, bit for bit ----------------------------
+
+@pytest.mark.parametrize("workers", [1, 4, 8])
+def test_faulty_run_many_bit_for_bit_fault_free(workers):
+    """Under a seeded transient-only schedule with retries, run_many
+    results are exactly the fault-free results at any worker count:
+    retries re-ask for the same records and a pure oracle answers the
+    same labels, so no committed result can change."""
+    ds, oracle = _dataset(30_000)
+    qs = _batch()
+    key = jax.random.PRNGKey(7)
+
+    with SelectionEngine(np.array_split(ds.scores, 4), num_bins=1024,
+                         use_kernel=False, workers=workers,
+                         clamp_workers=False) as engine:
+        ref = engine.run_many(key, oracle, qs)
+
+    schedule = fault_schedule(seed=17, n_calls=400, rate=0.3)
+    assert schedule                        # the chaos must actually engage
+    inj = FaultInjector(oracle, schedule)
+    with SelectionEngine(np.array_split(ds.scores, 4), num_bins=1024,
+                         use_kernel=False, workers=workers,
+                         clamp_workers=False) as engine:
+        client = BatchingOracle(inj, retry=_nosleep_policy(max_attempts=8))
+        out = engine.run_many(key, client, qs)
+    assert inj.injected["transient"] > 0
+    assert client.retries > 0
+
+    for r, o in zip(ref, out):
+        assert r.tau == o.tau
+        assert r.total_selected == o.total_selected
+        np.testing.assert_array_equal(np.concatenate(r.masks),
+                                      np.concatenate(o.masks))
+
+
+def test_faulty_server_bit_for_bit_fault_free():
+    """Same acceptance through the serving plane: SelectionServer with a
+    retrying channel over an injected-fault oracle returns exactly the
+    fault-free served results, and the stats surface the retries."""
+    ds, oracle = _dataset(30_000)
+    qs = _batch()
+    keys = list(jax.random.split(jax.random.PRNGKey(7), len(qs)))
+
+    with SelectionServer(_engine(ds), oracle, max_inflight=2,
+                         sessions=2) as server:
+        ref = [server.submit(q, key=k).result(timeout=120)
+               for q, k in zip(qs, keys)]
+
+    inj = FaultInjector(oracle, fault_schedule(seed=23, n_calls=400,
+                                               rate=0.3))
+    with SelectionServer(_engine(ds), inj, max_inflight=2, sessions=2,
+                         retry=_nosleep_policy(max_attempts=8)) as server:
+        out = [server.submit(q, key=k).result(timeout=120)
+               for q, k in zip(qs, keys)]
+        stats = server.stats()
+    assert inj.injected["transient"] > 0
+    assert stats.retries > 0 and stats.batch_failures == 0
+    assert "resilience:" in stats.format()
+
+    for r, o in zip(ref, out):
+        assert r.tau == o.tau
+        np.testing.assert_array_equal(np.concatenate(r.masks),
+                                      np.concatenate(o.masks))
+
+
+# -- server circuit shedding --------------------------------------------------
+
+def test_server_sheds_admissions_while_circuit_open():
+    """Once the breaker trips, submit() rejects with CircuitOpenError
+    (retry-after hint, counted as shed); after the cooldown the drain
+    path's half-open probe heals the circuit and the server admits
+    again. Admission checks never consume the probe slot."""
+    ds, oracle = _dataset(20_000)
+    t = [0.0]
+    br = CircuitBreaker(failure_threshold=1, reset_timeout_s=30.0,
+                        clock=lambda: t[0])
+    inj = FaultInjector(oracle, {0: "fatal"})
+    q = SUPGQuery(target="recall", gamma=0.9, budget=500, method="is")
+    with SelectionServer(_engine(ds, shards=2), inj,
+                         retry=_nosleep_policy(max_attempts=1),
+                         breaker=br) as server:
+        h = server.submit(q, key=jax.random.PRNGKey(0))
+        with pytest.raises(OracleFatalError):
+            h.result(timeout=120)
+        assert br.state == "open"
+        with pytest.raises(CircuitOpenError) as ei:
+            server.submit(q, key=jax.random.PRNGKey(1))
+        assert ei.value.retry_after_s > 0.0
+        stats = server.stats()
+        assert stats.circuit_state == "open" and stats.circuit_opens == 1
+        assert stats.circuit_shed == 1
+        assert stats.tenants["default"].shed == 1
+        assert stats.tenants["default"].in_flight == 0
+        assert "circuit open" in stats.format()
+        t[0] = 31.0                        # cooldown over: admit + probe
+        h2 = server.submit(q, key=jax.random.PRNGKey(2))
+        assert h2.result(timeout=120).total_selected >= 0
+        assert br.state == "closed"
+        assert server.stats().circuit_state == "closed"
+
+
+def test_server_rejects_resilience_kwargs_with_external_client():
+    ds, oracle = _dataset(20_000)
+    client = BatchingOracle(oracle)
+    with pytest.raises(ValueError, match="configure"):
+        SelectionServer(_engine(ds, shards=2), client,
+                        retry=RetryPolicy())
+    client.close()
+
+
+def test_server_inherits_breaker_from_external_client():
+    """An externally-owned channel's breaker still drives admission
+    shedding: the server reads it off the client."""
+    ds, oracle = _dataset(20_000)
+    t = [0.0]
+    br = CircuitBreaker(failure_threshold=1, reset_timeout_s=30.0,
+                        clock=lambda: t[0])
+    client = BatchingOracle(oracle, breaker=br)
+    br.record_failure()                    # trip it by hand
+    with SelectionServer(_engine(ds, shards=2), client) as server:
+        assert server.breaker is br
+        with pytest.raises(CircuitOpenError):
+            server.submit(SUPGQuery(target="recall", gamma=0.9,
+                                    budget=500, method="is"))
+    client.close()
+
+
+# -- server close(abandon=True) mid-drain (satellite) -------------------------
+
+def test_server_close_abandon_mid_drain_no_leaked_threads():
+    """close(abandon=True) while queries are mid-drain: the scheduler
+    thread exits, every outstanding ServerHandle resolves with
+    ServerClosedError, and no server/session/channel thread leaks."""
+    ds, _ = _dataset(20_000)
+    gate = threading.Event()
+    labels = ds.labels
+    calls = [0]
+
+    def gated_fn(idx):
+        calls[0] += 1
+        assert gate.wait(timeout=60), "gated oracle never released"
+        return labels[np.asarray(idx)]
+
+    before = set(threading.enumerate())
+    # JT needs >= 2 oracle rounds, so after _abandon the final scheduler
+    # pass cannot complete it — the handle must resolve ServerClosedError
+    q = JointSUPGQuery(gamma_recall=0.8, stage_budget=800)
+    server = SelectionServer(_engine(ds, shards=2), gated_fn,
+                             max_inflight=2)
+    handles = [server.submit(q, key=k)
+               for k in jax.random.split(jax.random.PRNGKey(1), 3)]
+    deadline = time.monotonic() + 30
+    while calls[0] == 0:                   # a drain is truly in flight
+        assert time.monotonic() < deadline, "drain never started"
+        time.sleep(0.005)
+    closer = threading.Thread(target=server.close, kwargs={"abandon": True})
+    closer.start()
+    time.sleep(0.05)
+    gate.set()                             # release the stuck oracle call
+    closer.join(timeout=60)
+    assert not closer.is_alive()
+    for h in handles:
+        with pytest.raises(ServerClosedError):
+            h.result(timeout=60)
+    deadline = time.monotonic() + 10
+    while set(threading.enumerate()) - before:
+        assert time.monotonic() < deadline, (
+            f"leaked threads: {set(threading.enumerate()) - before}")
+        time.sleep(0.01)
