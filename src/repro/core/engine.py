@@ -1022,7 +1022,8 @@ class SessionStats:
     fused_spans: int = 0       # spans the fused passes actually ran
     retries: int = 0           # oracle calls re-attempted (resilience)
     timeouts: int = 0          # oracle calls killed by the watchdog
-    batch_failures: int = 0    # micro-batches that exhausted retries
+    batch_failures: int = 0    # micro-batches that exhausted retries/fatal
+    batch_sheds: int = 0       # micro-batches shed by the open circuit
 
     @property
     def overlap_hidden_s(self) -> float:
@@ -1258,6 +1259,7 @@ class QuerySession:
         self.stats.retries += handle.retries
         self.stats.timeouts += handle.timeouts
         self.stats.batch_failures += handle.batch_failures
+        self.stats.batch_sheds += handle.batch_sheds
         for slot, ticket in pending:
             try:
                 slot[2] = ticket.result()

@@ -323,14 +323,14 @@ class DrainHandle:
     would trigger a useless synchronous drain of an empty pending set.
     `duration_s` is the wall time the resolve spent in flight (0.0 for
     the empty-drain fast path) — the overlap metric sessions report.
-    `retries` / `timeouts` / `batch_failures` are this drain's slice of
-    the channel's resilience counters (snapshotted under the channel
-    lock, so concurrent drains never double-count) — `SessionStats`
-    aggregates them per session.
+    `retries` / `timeouts` / `batch_failures` / `batch_sheds` are this
+    drain's slice of the channel's resilience counters (snapshotted
+    under the channel lock, so concurrent drains never double-count) —
+    `SessionStats` aggregates them per session.
     """
 
     __slots__ = ("_event", "_error", "tickets", "duration_s",
-                 "retries", "timeouts", "batch_failures")
+                 "retries", "timeouts", "batch_failures", "batch_sheds")
 
     def __init__(self, tickets: int = 0):
         self._event = threading.Event()
@@ -340,6 +340,7 @@ class DrainHandle:
         self.retries = 0
         self.timeouts = 0
         self.batch_failures = 0
+        self.batch_sheds = 0
 
     def _finish(self, error: Optional[BaseException],
                 duration_s: float = 0.0) -> None:
@@ -435,9 +436,21 @@ class BatchingOracle:
     are only ever charged for completed micro-batches. The breaker
     records one failure per exhausted micro-batch and trips open after
     its threshold; while open, micro-batches fail fast with
-    `CircuitOpenError` until the cooldown grants a half-open probe.
-    `retries` / `timeouts` / `batch_failures` count fn re-invocations,
-    watchdog overruns, and micro-batches that ultimately failed.
+    `CircuitOpenError` until the cooldown grants a half-open probe —
+    the probe's grant covers every retry attempt of its micro-batch,
+    and the chunk's final outcome (success / exhaustion) settles it.
+    `retries` / `timeouts` / `batch_failures` / `batch_sheds` count fn
+    re-invocations, watchdog overruns, micro-batches that exhausted
+    their retries (or failed fatally), and micro-batches shed by the
+    open circuit (sheds are load the breaker refused, not channel
+    failures, so the two counters never mix).
+
+    When `call_timeout_s` is set, a timed-out invocation's thread is
+    abandoned, not killed — so the retry that follows may run while the
+    abandoned call is still executing. ``fn`` must therefore tolerate
+    concurrent invocation when watchdogged (pure array lookups and
+    `testing.FaultInjector` qualify; an oracle with shared mutable
+    state needs its own lock).
 
     >>> import numpy as np
     >>> calls = []
@@ -496,7 +509,8 @@ class BatchingOracle:
         self.cache_hits = 0
         self.retries = 0          # fn re-invocations after transient errors
         self.timeouts = 0         # watchdogged calls that overran the deadline
-        self.batch_failures = 0   # micro-batches that ultimately failed
+        self.batch_failures = 0   # micro-batches that exhausted retries/fatal
+        self.batch_sheds = 0      # micro-batches shed by the open circuit
 
     @property
     def cache_size(self) -> int:
@@ -575,7 +589,7 @@ class BatchingOracle:
                         # resolve runs under the channel lock, so no
                         # concurrent drain can interleave its counts.
                         before = (self.retries, self.timeouts,
-                                  self.batch_failures)
+                                  self.batch_failures, self.batch_sheds)
                         try:
                             self._resolve_guarded(tickets)
                         finally:
@@ -583,6 +597,8 @@ class BatchingOracle:
                             handle.timeouts = self.timeouts - before[1]
                             handle.batch_failures = (
                                 self.batch_failures - before[2])
+                            handle.batch_sheds = (
+                                self.batch_sheds - before[3])
                 except BaseException as e:  # noqa: BLE001 — handle carries
                     err = e
                 handle._finish(err, time.perf_counter() - t0)
@@ -688,17 +704,31 @@ class BatchingOracle:
         validation, retried per `self.retry` with deterministic
         per-chunk backoff. Raises the final error once attempts are
         exhausted, the error is fatal, or the circuit is open; callers
-        (`_resolve`) translate that into fail-alone ticket poisoning."""
+        (`_resolve`) translate that into fail-alone ticket poisoning.
+
+        The breaker is consulted exactly once per chunk, *before* the
+        attempt loop: a granted half-open probe slot covers every retry
+        attempt of this chunk (re-asking `allow()` per attempt would
+        reject the probe's own retries and wedge the breaker half-open
+        with no failure ever recorded). The chunk's final outcome then
+        settles the probe — `record_success` closes the circuit,
+        `record_failure` on exhaustion re-opens it and restarts the
+        cooldown."""
+        if self.breaker is not None and not self.breaker.allow():
+            # Shed, not a channel failure: counted as `batch_sheds`
+            # (never `batch_failures` — during an outage every chunk of
+            # every drain sheds, which would swamp the retry-exhaustion
+            # signal) and never recorded on the breaker.
+            self.batch_sheds += 1
+            raise CircuitOpenError(
+                "oracle circuit open — shedding micro-batch",
+                retry_after_s=self.breaker.retry_after_s())
         policy = self.retry
         attempts = policy.max_attempts if policy is not None else 1
         salt = int(chunk[0]) if chunk.size else 0
         attempt = 1
         while True:
             try:
-                if self.breaker is not None and not self.breaker.allow():
-                    raise CircuitOpenError(
-                        "oracle circuit open — shedding micro-batch",
-                        retry_after_s=self.breaker.retry_after_s())
                 if self._pacer is not None:
                     self._pacer(int(chunk.size))
                 if self.call_timeout_s is not None:
@@ -717,11 +747,6 @@ class BatchingOracle:
             except BaseException as err:  # noqa: BLE001 — classified below
                 if isinstance(err, OracleTimeoutError):
                     self.timeouts += 1
-                if isinstance(err, CircuitOpenError):
-                    # Not a channel failure — the breaker already shed
-                    # it; recording a failure would double-count.
-                    self.batch_failures += 1
-                    raise
                 retryable = (policy.retryable(err) if policy is not None
                              else is_retryable(err))
                 if not retryable or attempt >= attempts:

@@ -26,10 +26,12 @@ Error taxonomy
 
 `CircuitBreaker`
     closed → open after N consecutive exhausted micro-batches →
-    half-open probe after a cooldown. The channel consults it before
-    each oracle invocation; the serving plane consults it at admission
-    so a down oracle sheds load with a retry-after hint instead of
-    queueing work that will die.
+    half-open probe after a cooldown. The channel consults it once per
+    micro-batch, before the retry loop — a granted half-open probe
+    covers every attempt of that chunk, and the chunk's final outcome
+    settles the probe; the serving plane consults it at admission so a
+    down oracle sheds load with a retry-after hint instead of queueing
+    work that will die.
 
 `call_with_timeout`
     The per-call watchdog: runs the oracle callable on a sacrificial
@@ -109,6 +111,14 @@ class CircuitOpenError(OracleError):
 _TRANSIENT_BUILTINS = (ConnectionError, TimeoutError, InterruptedError,
                        OSError)
 
+#: `OSError` subclasses that are deterministic, not transport blips: a
+#: missing file, a permission wall, or a path-shape error will not heal
+#: on retry — retrying one just burns the whole backoff budget on the
+#: drain thread (under the channel lock) before failing anyway.
+_DETERMINISTIC_OSERRORS = (FileNotFoundError, FileExistsError,
+                           IsADirectoryError, NotADirectoryError,
+                           PermissionError)
+
 
 def is_retryable(err: BaseException) -> bool:
     """Classify an exception as retryable (transient) or fatal.
@@ -116,13 +126,17 @@ def is_retryable(err: BaseException) -> bool:
     An explicit boolean ``retryable`` attribute on the exception wins
     (the taxonomy classes above carry one; `serve.RateLimitError`
     declares itself fatal); otherwise common transport exception types
-    are transient and everything else — `ValueError`, assertion
-    failures, arbitrary logic errors — is fatal, because retrying a
-    deterministic bug just burns the rate budget.
+    are transient — except the deterministic `OSError` subclasses like
+    `FileNotFoundError` and `PermissionError`, which no retry can fix —
+    and everything else — `ValueError`, assertion failures, arbitrary
+    logic errors — is fatal, because retrying a deterministic bug just
+    burns the rate budget.
     """
     flag = getattr(err, "retryable", None)
     if flag is not None:
         return bool(flag)
+    if isinstance(err, _DETERMINISTIC_OSERRORS):
+        return False
     return isinstance(err, _TRANSIENT_BUILTINS)
 
 
@@ -316,6 +330,15 @@ def call_with_timeout(fn: Callable, arg, timeout_s: float):
     is discarded, so a late answer can never reach the label cache. A
     thread per call is cheap next to an oracle invocation (the whole
     point of the channel is that ``fn`` is expensive).
+
+    Abandoned means exactly that: Python offers no safe way to kill the
+    runaway thread, so it keeps executing ``fn`` until it returns on
+    its own. A caller that retries after the timeout (the channel's
+    `RetryPolicy` does) therefore re-invokes ``fn`` while the abandoned
+    call may still be running — ``fn`` must tolerate concurrent
+    invocation. Pure functions and `testing.FaultInjector` (which locks
+    internally) qualify; an oracle with shared mutable state needs its
+    own synchronization.
     """
     box: List[Tuple[str, object]] = []
     done = threading.Event()

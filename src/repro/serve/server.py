@@ -304,6 +304,7 @@ class SelectionServer:
         snap.retries = getattr(self.channel, "retries", 0)
         snap.timeouts = getattr(self.channel, "timeouts", 0)
         snap.batch_failures = getattr(self.channel, "batch_failures", 0)
+        snap.batch_sheds = getattr(self.channel, "batch_sheds", 0)
         if self.breaker is not None:
             snap.circuit_state = self.breaker.state
             snap.circuit_opens = self.breaker.opens

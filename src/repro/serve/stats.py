@@ -105,8 +105,8 @@ class ServerStats:
     `tenants` maps tenant name to its `TenantStats`; the scalar fields
     aggregate the channel (`oracle_calls`, `records_labeled`,
     `cache_hits`, `throttle_wait_s`), the channel's resilience layer
-    (`retries`, `timeouts`, `batch_failures`, plus the breaker's
-    `circuit_state`/`circuit_opens`), the session pool's scheduler
+    (`retries`, `timeouts`, `batch_failures`, `batch_sheds`, plus the
+    breaker's `circuit_state`/`circuit_opens`), the session pool's scheduler
     accounting (`rounds`, `drains`, `overlap_hidden_s`), and end-to-end
     query latency (`p50_s`/`p99_s`, measured submit -> result-ready,
     queue wait included).
@@ -130,6 +130,8 @@ class ServerStats:
     retries: int = 0                 # oracle calls re-attempted
     timeouts: int = 0                # oracle calls killed by the watchdog
     batch_failures: int = 0          # micro-batches that exhausted retries
+                                     # (or failed fatally) — excludes sheds
+    batch_sheds: int = 0             # micro-batches shed by the open circuit
     circuit_state: str = "closed"    # breaker state at snapshot time
     circuit_opens: int = 0           # closed -> open transitions so far
 
@@ -172,8 +174,10 @@ class ServerStats:
             f"hidden under compute",
             f"resilience: {self.retries} retries, {self.timeouts} "
             f"timeouts, {self.batch_failures} failed micro-batches, "
+            f"{self.batch_sheds} shed micro-batches, "
             f"circuit {self.circuit_state} "
-            f"({self.circuit_opens} opens, {self.circuit_shed} shed)",
+            f"({self.circuit_opens} opens, "
+            f"{self.circuit_shed} admissions shed)",
         ]
         for name in sorted(self.tenants):
             t = self.tenants[name]

@@ -87,6 +87,13 @@ def test_taxonomy_classification():
     assert is_retryable(ConnectionResetError())
     assert is_retryable(TimeoutError())
     assert not is_retryable(ValueError("bug"))
+    # generic OS-level I/O errors are transient, but the deterministic
+    # OSError subclasses are not — a missing file won't heal on retry
+    assert is_retryable(OSError("EIO"))
+    assert is_retryable(BrokenPipeError())
+    assert not is_retryable(FileNotFoundError("model.ckpt"))
+    assert not is_retryable(PermissionError("denied"))
+    assert not is_retryable(IsADirectoryError("/tmp"))
     # an explicit retryable attribute wins over the heuristics
     err = ValueError("flaky wire format")
     err.retryable = True
@@ -258,10 +265,60 @@ def test_breaker_trips_channel_and_sheds_then_heals():
         t3.result()
     assert ei.value.retry_after_s > 0.0
     assert inj.calls == calls_before       # shed without touching the oracle
+    # sheds are refused load, not channel failures: counted apart
+    assert client.batch_sheds == 1 and client.batch_failures == 2
     t[0] = 6.0                             # cooldown elapsed: probe allowed
     t4 = client.submit([7, 8], ledger=led)
     np.testing.assert_array_equal(t4.result(), [7.0, 8.0])
     assert br.state == "closed" and br.closes == 1
+
+
+def test_half_open_probe_keeps_slot_across_retries_and_heals():
+    """Regression: the breaker is consulted once per micro-batch, so a
+    half-open probe whose first attempt fails transiently retries under
+    its own grant — it must not be rejected with CircuitOpenError by
+    the probe slot it is holding (which used to wedge the breaker
+    half-open forever)."""
+    t = [0.0]
+    br = CircuitBreaker(failure_threshold=1, reset_timeout_s=5.0,
+                        clock=lambda: t[0])
+    inj = FaultInjector(array_oracle(np.arange(64.0)),
+                        {0: "fatal", 1: "transient"})
+    client = BatchingOracle(inj, retry=_nosleep_policy(), breaker=br)
+    led = BudgetLedger(32)
+    with pytest.raises(OracleFatalError):
+        client.submit([1, 2], ledger=led).result()
+    assert br.state == "open"
+    t[0] = 6.0                             # cooldown over: next chunk probes
+    tk = client.submit([3, 4], ledger=led) # probe blips, retry answers
+    np.testing.assert_array_equal(tk.result(), [3.0, 4.0])
+    assert br.state == "closed" and client.retries == 1
+    assert client.batch_sheds == 0         # the probe was never self-shed
+
+
+def test_half_open_probe_exhaustion_reopens_not_wedges():
+    """Regression companion: a probe whose every attempt fails must
+    re-open the circuit (record_failure restarts the cooldown) — not
+    strand it half-open with retry_after_s() == 0 shedding forever."""
+    t = [0.0]
+    br = CircuitBreaker(failure_threshold=1, reset_timeout_s=5.0,
+                        clock=lambda: t[0])
+    inj = FaultInjector(array_oracle(np.arange(64.0)),
+                        {0: "fatal", 1: "transient", 2: "transient"})
+    client = BatchingOracle(inj, retry=_nosleep_policy(max_attempts=2),
+                            breaker=br)
+    led = BudgetLedger(32)
+    with pytest.raises(OracleFatalError):
+        client.submit([1, 2], ledger=led).result()
+    t[0] = 6.0                             # cooldown over
+    with pytest.raises(OracleTransientError, match="injected"):
+        client.submit([3, 4], ledger=led).result()   # probe exhausts
+    assert br.state == "open" and br.opens == 2
+    assert br.retry_after_s() == pytest.approx(5.0)  # cooldown restarted
+    t[0] = 12.0                            # next probe: schedule is clean
+    tk = client.submit([5, 6], ledger=led)
+    np.testing.assert_array_equal(tk.result(), [5.0, 6.0])
+    assert br.state == "closed"
 
 
 # -- pacer taxonomy (satellite) -----------------------------------------------
