@@ -7,12 +7,13 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
                    (skipped silently if the dry-run artifact is absent)
 
 ``--json PATH`` additionally writes every captured row to a
-machine-readable trajectory file (CI uploads it as the BENCH_PR8.json
+machine-readable trajectory file (CI uploads it as the BENCH_PR9.json
 artifact per commit; ``--fast --json`` is the quick tier CI runs, covering
 engine cold-build at 1/4/8 workers, draw_sample throughput, the run_many
-batch, and threshold_select throughput at 1e6/1e7 records).
+batch, threshold_select throughput at 1e6/1e7 records, and the live-plane
+rows: incremental ingestion vs rebuild-per-append and standing-query lag).
 ``--baseline PATH`` diffs the captured rows against a committed trajectory
-file (the repo carries ``BENCH_PR8.json``) and prints a per-row delta
+file (the repo carries ``BENCH_PR9.json``) and prints a per-row delta
 table, so every CI run shows its drift from the checked-in baseline.
 """
 from __future__ import annotations
@@ -67,7 +68,8 @@ def main() -> None:
             print(f"baseline {args.baseline} unreadable ({e}); "
                   "skipping delta table", file=sys.stderr)
 
-    from benchmarks import bench_kernels, bench_serve, paper_figures
+    from benchmarks import (bench_kernels, bench_live, bench_serve,
+                            paper_figures)
 
     benches = []
     if not args.fast:
@@ -79,6 +81,7 @@ def main() -> None:
                      paper_figures.bench_recall_target)]
     benches += [(f.__name__, f) for f in bench_kernels.ALL]
     benches += [(f.__name__, f) for f in bench_serve.ALL]
+    benches += [(f.__name__, f) for f in bench_live.ALL]
 
     failed = []
     rows = []

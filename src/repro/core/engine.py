@@ -136,6 +136,7 @@ from __future__ import annotations
 import dataclasses
 import logging
 import os
+import threading
 import time
 from typing import (Dict, Generator, List, Optional, Sequence, Tuple,
                     Union)
@@ -275,6 +276,37 @@ class _ShardChunkState:
     cdf: np.ndarray        # (n_chunks,) float64 normalized chunk-mass CDF
 
 
+@dataclasses.dataclass
+class CorpusState:
+    """One immutable corpus *epoch*: every piece of engine state an append
+    replaces as a unit.
+
+    The live plane (`repro.live`) grows the corpus by building a new
+    `CorpusState` from the current one plus the appended shards and
+    installing it with a single attribute assignment — old snapshots stay
+    fully valid (shard arrays are never mutated, only the lists are
+    extended into fresh objects), so an in-flight plan that pinned its
+    epoch at the first step keeps computing against a frozen, consistent
+    corpus no matter how many appends land meanwhile. Results over a
+    pinned epoch are bit-for-bit what a cold engine build over exactly
+    that corpus would produce.
+    """
+
+    epoch: int                          # 0 at construction, +1 per append
+    shards: List[np.ndarray]            # score shards (views, never copies)
+    offsets: np.ndarray                 # (n_shards+1,) int64 global offsets
+    n_total: int                        # total records this epoch
+    plan: pipeline.ChunkPlan            # the epoch's canonical chunk plan
+    shard_sketches: List                # per-shard binned.ScoreSketch
+    sketch: object                      # global merged ScoreSketch
+    chunk_masses: List[sampling.ChunkMasses]   # per-shard raw chunk masses
+    z: Dict[str, float]                 # global weight normalizers
+    flat: Optional[np.ndarray]          # score_at gather cache (or None)
+    sampling_cache: Dict[Tuple[str, float],
+                         List[_ShardChunkState]] = dataclasses.field(
+                             default_factory=dict)
+
+
 class SelectionEngine:
     """Executes batches of SUPG queries over a list of score shards.
 
@@ -314,11 +346,7 @@ class SelectionEngine:
         if cache_flat is None:
             cache_flat = not any(isinstance(s, np.memmap)
                                  for s in raw_shards)
-        self.shards = [np.asarray(s) for s in raw_shards]
-        self.offsets = np.concatenate(
-            [[0], np.cumsum([s.shape[0] for s in self.shards])]).astype(
-                np.int64)
-        self.n_total = int(self.offsets[-1])
+        arrs = [np.asarray(s) for s in raw_shards]
         self.num_bins = num_bins
         self.kappa = float(kappa)
         # Streaming emission knobs: chunk_records bounds per-query peak
@@ -332,58 +360,87 @@ class SelectionEngine:
         # once (lazily, on the first threaded walk), not per chunk walk.
         self.workers = _effective_workers(workers, clamp_workers)
         self.pool = pipeline.WorkerPool(self.workers)
-        self.plan = pipeline.ChunkPlan(
-            [int(s.shape[0]) for s in self.shards], self.chunk_records)
-        self._flat = (np.concatenate(
-            [np.asarray(s, np.float32) for s in self.shards])
-            if cache_flat and self.shards else None)
+        # Appends (the live plane's `_append_shards`) sketch under this
+        # lock and publish their new CorpusState with one assignment.
+        self._use_kernel = use_kernel
+        self._ingest_lock = threading.Lock()
+        plan = pipeline.ChunkPlan([int(s.shape[0]) for s in arrs],
+                                  self.chunk_records)
+        flat = (np.concatenate([np.asarray(s, np.float32) for s in arrs])
+                if cache_flat and arrs else None)
 
         # 1. chunked construction pass (ChunkPlan-driven, threaded): each
         #    span yields its ScoreSketch *and* its raw sampling masses in
         #    one touch of the data. Sketches merge additively into
         #    per-shard and global sketches, so even memmap shards never
         #    materialize whole; the per-chunk masses become the persistent
-        #    O(n / chunk_records) hierarchical sampling state.
-        spans = list(self.plan)
+        #    O(n / chunk_records) hierarchical sampling state. The same
+        #    pass, restricted to appended shards only, is how the live
+        #    plane extends an epoch (`_append_shards`).
+        shard_sketches, chunk_masses = self._sketch_shards(
+            arrs, plan, 0, use_kernel)
+        sketch = binned.merge_sketches(*shard_sketches)
+
+        # 2. global weight normalizers from the merged sketch — the only
+        #    cross-shard reductions sampling ever needs.
+        z_sqrt, z_prop, _ = binned.weight_normalizers(sketch)
+
+        offsets = np.concatenate(
+            [[0], np.cumsum([s.shape[0] for s in arrs])]).astype(np.int64)
+        self._state = CorpusState(
+            epoch=0, shards=arrs, offsets=offsets,
+            n_total=int(offsets[-1]), plan=plan,
+            shard_sketches=shard_sketches, sketch=sketch,
+            chunk_masses=chunk_masses,
+            z={"sqrt": float(z_sqrt), "prop": float(z_prop)}, flat=flat)
+
+        # 3. chunk-mass CDFs per (scheme, kappa) — O(n_chunks) each.
+        #    `weight_schemes` is a pre-warm hint only: since the dense
+        #    per-record CDFs are gone, every scheme is bounded-memory and
+        #    un-warmed schemes build lazily on first use.
+        for scheme in weight_schemes:
+            self._sampling_state(scheme, self.kappa)
+
+    def _sketch_shards(self, shards: List[np.ndarray],
+                       plan: pipeline.ChunkPlan, first_shard: int,
+                       use_kernel: Optional[bool]):
+        """Chunked sketch + raw-mass pass over ``shards[first_shard:]``.
+
+        Returns (per-shard sketches, per-shard ChunkMasses) for exactly
+        those shards. The construction pass calls this with
+        ``first_shard=0``; `_append_shards` calls it with the old shard
+        count so only appended data is ever touched — and because both
+        paths share this one implementation (same span order, same
+        per-chunk `chunk_sketch_stats`, same merge fold), the delta path's
+        per-shard results are bit-for-bit the cold build's.
+        """
+        spans = [sp for sp in plan if sp.shard_id >= first_shard]
         stats = self.pool.map(
             lambda sp: binned.chunk_sketch_stats(
-                self.shards[sp.shard_id][sp.start:sp.stop], num_bins,
+                shards[sp.shard_id][sp.start:sp.stop], self.num_bins,
                 use_kernel=use_kernel),
             spans)
-        parts: List[List] = [[] for _ in self.shards]
-        sums: List[List[Tuple[float, float, int]]] = [[] for _ in self.shards]
+        k = len(shards) - first_shard
+        parts: List[List] = [[] for _ in range(k)]
+        sums: List[List[Tuple[float, float, int]]] = [[] for _ in range(k)]
         for sp, (sk, s_sqrt, s_a) in zip(spans, stats):
-            parts[sp.shard_id].append(sk)
-            sums[sp.shard_id].append((s_sqrt, s_a, sp.size))
+            parts[sp.shard_id - first_shard].append(sk)
+            sums[sp.shard_id - first_shard].append((s_sqrt, s_a, sp.size))
         # Empty shards get an all-zero sketch via the jnp path (the kernel
         # grid cannot span a zero-length operand).
-        self.shard_sketches = [
+        sketches = [
             binned.merge_sketches(*p) if p else
-            binned.build_sketch(jnp.zeros((0,), jnp.float32), num_bins,
+            binned.build_sketch(jnp.zeros((0,), jnp.float32), self.num_bins,
                                 use_kernel=False)
             for p in parts]
-        self.sketch = binned.merge_sketches(*self.shard_sketches)
-        self._chunk_masses = [
+        masses = [
             sampling.ChunkMasses(
                 np.asarray([t[0] for t in ss], np.float64),
                 np.asarray([t[1] for t in ss], np.float64),
                 np.asarray([t[2] for t in ss], np.int64))
             if ss else sampling.ChunkMasses.empty()
             for ss in sums]
-
-        # 2. global weight normalizers from the merged sketch — the only
-        #    cross-shard reductions sampling ever needs.
-        z_sqrt, z_prop, _ = binned.weight_normalizers(self.sketch)
-        self._z = {"sqrt": float(z_sqrt), "prop": float(z_prop)}
-
-        # 3. chunk-mass CDFs per (scheme, kappa) — O(n_chunks) each.
-        #    `weight_schemes` is a pre-warm hint only: since the dense
-        #    per-record CDFs are gone, every scheme is bounded-memory and
-        #    un-warmed schemes build lazily on first use.
-        self._sampling_cache: Dict[Tuple[str, float], List[
-            _ShardChunkState]] = {}
-        for scheme in weight_schemes:
-            self._sampling_state(scheme, self.kappa)
+        return sketches, masses
 
     # -- lifecycle ------------------------------------------------------
 
@@ -400,33 +457,144 @@ class SelectionEngine:
         self.close()
         return False
 
-    # -- cached state ---------------------------------------------------
+    # -- cached state (epoch snapshots) ---------------------------------
 
-    def _sampling_state(self, scheme: str,
-                        kappa: float) -> List[_ShardChunkState]:
+    def pin(self) -> CorpusState:
+        """Snapshot the current corpus epoch.
+
+        Pass the returned `CorpusState` to `draw_sample` / `score_at` /
+        `QuerySession.submit(state=...)` to keep a multi-step computation
+        on one frozen, consistent corpus while `repro.live` appends land
+        concurrently. Cheap (one attribute read — installs are atomic)."""
+        return self._state
+
+    @property
+    def epoch(self) -> int:
+        """Current corpus epoch: 0 at construction, +1 per append."""
+        return self._state.epoch
+
+    @property
+    def shards(self) -> List[np.ndarray]:
+        """Score shards of the current epoch (views, never copies)."""
+        return self._state.shards
+
+    @property
+    def offsets(self) -> np.ndarray:
+        """(n_shards+1,) int64 global record offsets, current epoch."""
+        return self._state.offsets
+
+    @property
+    def n_total(self) -> int:
+        """Total records in the current epoch."""
+        return self._state.n_total
+
+    @property
+    def plan(self) -> pipeline.ChunkPlan:
+        """The current epoch's canonical ChunkPlan."""
+        return self._state.plan
+
+    @property
+    def sketch(self):
+        """Global merged ScoreSketch of the current epoch."""
+        return self._state.sketch
+
+    @property
+    def shard_sketches(self) -> List:
+        """Per-shard ScoreSketches of the current epoch."""
+        return self._state.shard_sketches
+
+    @property
+    def _chunk_masses(self) -> List[sampling.ChunkMasses]:
+        return self._state.chunk_masses
+
+    @property
+    def _z(self) -> Dict[str, float]:
+        return self._state.z
+
+    @property
+    def _flat(self) -> Optional[np.ndarray]:
+        return self._state.flat
+
+    @property
+    def _sampling_cache(self) -> Dict[Tuple[str, float],
+                                      List[_ShardChunkState]]:
+        return self._state.sampling_cache
+
+    def _append_shards(self, shards: Sequence,
+                       use_kernel: Optional[bool] = None) -> CorpusState:
+        """Extend the corpus by `shards`, delta-updating engine state.
+
+        The incremental-ingestion core (`repro.live.IngestPlane` is the
+        public face): sketch *only* the appended shards via the shared
+        `_sketch_shards` pass, fold them into the global sketch
+        (`merge_sketches` is a left fold starting at 0, so folding the new
+        per-shard sketches onto the old global reproduces the cold fold
+        bit-for-bit), refresh the normalizers, rebuild the O(n_chunks)
+        per-(scheme, kappa) CDFs for every cached scheme (Z and n change
+        on every append, but the rebuild reads only cached chunk masses —
+        no old data is re-walked), and install the new `CorpusState`
+        atomically. Existing epochs pinned by in-flight plans stay valid.
+        Returns the new state.
+        """
+        raw_new = [getattr(s, "scores", s) for s in shards]
+        arrs = [np.asarray(s) for s in raw_new]
+        kernel = self._use_kernel if use_kernel is None else use_kernel
+        with self._ingest_lock:
+            st = self._state
+            all_shards = st.shards + arrs
+            sizes = [int(s.shape[0]) for s in all_shards]
+            plan = pipeline.ChunkPlan(sizes, self.chunk_records)
+            new_sketches, new_masses = self._sketch_shards(
+                all_shards, plan, len(st.shards), kernel)
+            sketch = (binned.merge_sketches(st.sketch, *new_sketches)
+                      if new_sketches else st.sketch)
+            z_sqrt, z_prop, _ = binned.weight_normalizers(sketch)
+            offsets = np.concatenate(
+                [[0], np.cumsum(sizes)]).astype(np.int64)
+            if st.flat is None or any(isinstance(s, np.memmap)
+                                      for s in raw_new):
+                flat = None     # out-of-core data keeps the routed path
+            elif arrs:
+                flat = np.concatenate(
+                    [st.flat] + [np.asarray(a, np.float32) for a in arrs])
+            else:
+                flat = st.flat
+            new_state = CorpusState(
+                epoch=st.epoch + 1, shards=all_shards, offsets=offsets,
+                n_total=int(offsets[-1]), plan=plan,
+                shard_sketches=st.shard_sketches + new_sketches,
+                sketch=sketch, chunk_masses=st.chunk_masses + new_masses,
+                z={"sqrt": float(z_sqrt), "prop": float(z_prop)},
+                flat=flat)
+            # Pre-warm every (scheme, kappa) the outgoing epoch served so
+            # the first post-append query pays no lazy build.
+            for scheme, kappa in list(st.sampling_cache):
+                self._sampling_state(scheme, kappa, state=new_state)
+            self._state = new_state
+            return new_state
+
+    def _sampling_state(self, scheme: str, kappa: float,
+                        state: Optional[CorpusState] = None) \
+            -> List[_ShardChunkState]:
+        st = self._state if state is None else state
         cache_key = (scheme, float(kappa))
-        if cache_key not in self._sampling_cache:
+        if cache_key not in st.sampling_cache:
             states = []
-            for cm in self._chunk_masses:
+            for cm in st.chunk_masses:
                 if cm.sizes.size == 0:   # empty shard: zero mass, no draws
                     states.append(_ShardChunkState(
                         mass=0.0, cdf=np.empty(0, np.float64)))
                     continue
-                m_c = sampling.defensive_chunk_mass(
-                    cm.raw(scheme), cm.sizes, self._z[scheme], kappa,
-                    self.n_total)
-                total = float(m_c.sum())
-                if not total > 0:
-                    raise ValueError(
-                        "shard has no sampling mass (kappa=0 with an "
-                        "all-zero proxy?)")
-                states.append(_ShardChunkState(
-                    mass=total, cdf=np.cumsum(m_c) / total))
-            self._sampling_cache[cache_key] = states
-        return self._sampling_cache[cache_key]
+                total, cdf = sampling.chunk_mass_cdf(
+                    cm.raw(scheme), cm.sizes, st.z[scheme], kappa,
+                    st.n_total)
+                states.append(_ShardChunkState(mass=total, cdf=cdf))
+            st.sampling_cache[cache_key] = states
+        return st.sampling_cache[cache_key]
 
-    def _shard_masses(self, scheme: str, kappa: float) -> np.ndarray:
-        states = self._sampling_state(scheme, kappa)
+    def _shard_masses(self, scheme: str, kappa: float,
+                      state: Optional[CorpusState] = None) -> np.ndarray:
+        states = self._sampling_state(scheme, kappa, state=state)
         mass = np.asarray([st.mass for st in states], np.float64)
         return mass / mass.sum()
 
@@ -448,7 +616,8 @@ class SelectionEngine:
             yield int(values[grp[0]]), grp
 
     def draw_sample(self, key, s: int, scheme: str = "sqrt",
-                    kappa: Optional[float] = None):
+                    kappa: Optional[float] = None,
+                    state: Optional[CorpusState] = None):
         """Global with-replacement draws; returns (global_idx, m).
 
         Hierarchical (shard → chunk → record): multinomial over cached
@@ -462,13 +631,15 @@ class SelectionEngine:
         shard and chunk with argsorts (no per-shard mask scans) and chunk
         resolution runs through the worker pool; outputs land in
         preassigned slots, so results are identical at any worker count.
+        `state` pins a specific corpus epoch (default: current).
         """
+        st = self._state if state is None else state
         if scheme == "uniform":
-            idx = jax.random.randint(key, (s,), 0, self.n_total)
+            idx = jax.random.randint(key, (s,), 0, st.n_total)
             return np.asarray(idx, np.int64), np.ones(s, np.float32)
         kappa = self.kappa if kappa is None else kappa
-        states = self._sampling_state(scheme, kappa)
-        mass = self._shard_masses(scheme, kappa)
+        states = self._sampling_state(scheme, kappa, state=st)
+        mass = self._shard_masses(scheme, kappa, state=st)
         k_alloc, k_chunk, k_rec = jax.random.split(key, 3)
         alloc = np.asarray(jax.random.categorical(
             k_alloc, jnp.log(jnp.asarray(mass, jnp.float32)), shape=(s,)))
@@ -484,43 +655,46 @@ class SelectionEngine:
                     chunk_ids, np.argsort(chunk_ids, kind="stable")):
                 work.append((sh, ci, seg[grp]))
 
-        chunk = self.plan.chunk_records
+        chunk = st.plan.chunk_records
 
         def resolve(item):
             sh, ci, pos = item
             start = ci * chunk
             p = sampling.defensive_probs(
-                self.shards[sh][start:start + chunk], scheme,
-                self._z[scheme], kappa, self.n_total)
+                st.shards[sh][start:start + chunk], scheme,
+                st.z[scheme], kappa, st.n_total)
             local = sampling.draw_from_cdf(sampling.normalized_cdf(p),
                                            u_rec[pos])
-            out_idx[pos] = self.offsets[sh] + start + local
-            out_m[pos] = (1.0 / self.n_total) / np.maximum(
+            out_idx[pos] = st.offsets[sh] + start + local
+            out_m[pos] = (1.0 / st.n_total) / np.maximum(
                 p[local], 1e-38)
 
         self.pool.map(resolve, work)
         return out_idx, out_m
 
-    def score_at(self, global_idx) -> np.ndarray:
+    def score_at(self, global_idx,
+                 state: Optional[CorpusState] = None) -> np.ndarray:
         """Vectorized gather: one flat fancy gather when the concatenation
         cache is live, else searchsorted shard routing + per-shard fancy
-        indexing (works unchanged on memmap shards)."""
+        indexing (works unchanged on memmap shards). `state` pins a
+        specific corpus epoch (default: current)."""
+        st = self._state if state is None else state
         gi = np.asarray(global_idx, np.int64)
-        if self._flat is not None:
-            return self._flat[gi]
-        sh = np.searchsorted(self.offsets, gi, side="right") - 1
-        local = gi - self.offsets[sh]
+        if st.flat is not None:
+            return st.flat[gi]
+        sh = np.searchsorted(st.offsets, gi, side="right") - 1
+        local = gi - st.offsets[sh]
         out = np.empty(gi.shape[0], np.float32)
         # Group draws by shard with one argsort, then gather each shard's
         # segment with a single fancy index (one touch per shard).
         order = np.argsort(sh, kind="stable")
         seg_bounds = np.searchsorted(sh[order],
-                                     np.arange(len(self.shards) + 1))
-        for shard_id in range(len(self.shards)):
+                                     np.arange(len(st.shards) + 1))
+        for shard_id in range(len(st.shards)):
             seg = order[seg_bounds[shard_id]:seg_bounds[shard_id + 1]]
             if seg.size:
                 out[seg] = np.asarray(
-                    self.shards[shard_id][local[seg]], np.float32)
+                    st.shards[shard_id][local[seg]], np.float32)
         return out
 
     # -- query plans ------------------------------------------------------
@@ -528,7 +702,8 @@ class SelectionEngine:
     def _run_plan(self, key, query: SUPGQuery, *,
                   sink: Optional[pipeline.SelectionSink] = None,
                   chunk_records: Optional[int] = None,
-                  ledger_parent: Optional[BudgetLedger] = None) \
+                  ledger_parent: Optional[BudgetLedger] = None,
+                  state: Optional[CorpusState] = None) \
             -> Generator[object, Optional[np.ndarray], ShardedSelection]:
         """Resumable plan for one RT/PT query.
 
@@ -542,18 +717,22 @@ class SelectionEngine:
         and answer their requests from one coalesced labeling channel.
         `ledger_parent` chains the query's budget ledger under a coarser
         shared ledger (the serving plane's per-tenant quota) — see
-        `core.oracle.BudgetLedger`. Returns the ShardedSelection via
+        `core.oracle.BudgetLedger`. The plan pins one `CorpusState` at
+        its first step (`state` overrides which) and computes against
+        that frozen epoch end to end, so live-plane appends landing
+        mid-plan can never mix corpora. Returns the ShardedSelection via
         StopIteration.value.
         """
         key = jax.random.PRNGKey(0) if key is None else key
+        st = self._state if state is None else state
         ledger = BudgetLedger(query.budget, parent=ledger_parent)
         s = query.budget
         if query.target == "recall":
             scheme = {"is": query.weight_scheme, "uniform": "uniform",
                       "noci": "uniform"}[query.method]
-            idx, m = self.draw_sample(key, s, scheme)
+            idx, m = self.draw_sample(key, s, scheme, state=st)
             o_s = yield OracleRequest(idx, ledger)
-            a_s = self.score_at(idx)
+            a_s = self.score_at(idx, state=st)
             if query.method == "noci":
                 res = thresholds.tau_unoci_r(a_s, o_s, query.gamma)
             else:
@@ -563,25 +742,27 @@ class SelectionEngine:
         else:
             k0, k1 = jax.random.split(key)
             if query.method == "is" and query.two_stage:
-                idx0, m0 = self.draw_sample(k0, s // 2, query.weight_scheme)
+                idx0, m0 = self.draw_sample(k0, s // 2,
+                                            query.weight_scheme, state=st)
                 o0 = yield OracleRequest(idx0, ledger)
                 _, rank = thresholds.pt_stage1_nmatch(
-                    o0, m0, self.n_total, query.gamma, query.delta)
-                tau_dp = float(binned.rank_to_threshold(self.sketch,
+                    o0, m0, st.n_total, query.gamma, query.delta)
+                tau_dp = float(binned.rank_to_threshold(st.sketch,
                                                         int(rank)))
                 # stage 2: uniform on D' via per-shard masked draws
-                idx1 = self._uniform_in_region(k1, s - s // 2, tau_dp)
+                idx1 = self._uniform_in_region(k1, s - s // 2, tau_dp,
+                                               state=st)
                 o1 = yield OracleRequest(idx1, ledger)
-                a1 = self.score_at(idx1)
+                a1 = self.score_at(idx1, state=st)
                 res = thresholds.tau_ci_p(a1, o1, query.gamma,
                                           query.delta / 2.0,
                                           min_step=query.min_step)
             else:
                 scheme = ("uniform" if query.method in ("uniform", "noci")
                           else query.weight_scheme)
-                idx, m = self.draw_sample(k0, s, scheme)
+                idx, m = self.draw_sample(k0, s, scheme, state=st)
                 o_s = yield OracleRequest(idx, ledger)
-                a_s = self.score_at(idx)
+                a_s = self.score_at(idx, state=st)
                 if query.method == "noci":
                     res = thresholds.tau_unoci_p(a_s, o_s, query.gamma)
                 else:
@@ -593,7 +774,8 @@ class SelectionEngine:
 
         pos = ledger.labeled_positives()
         walk, out_sink, finish = self._emission_walk(tau, pos, sink,
-                                                     chunk_records)
+                                                     chunk_records,
+                                                     state=st)
         try:
             yield walk
         except BaseException:
@@ -607,7 +789,8 @@ class SelectionEngine:
     def _run_joint_plan(self, key, query: JointSUPGQuery, *,
                         sink: Optional[pipeline.SelectionSink] = None,
                         chunk_records: Optional[int] = None,
-                        ledger_parent: Optional[BudgetLedger] = None) \
+                        ledger_parent: Optional[BudgetLedger] = None,
+                        state: Optional[CorpusState] = None) \
             -> Generator[object, Optional[np.ndarray], ShardedSelection]:
         """Resumable plan for one JT query (Appendix A): the RT sub-plan
         (delegated via `yield from`, so its oracle requests ride the same
@@ -616,24 +799,27 @@ class SelectionEngine:
         design — and exists for `oracle_calls` attribution; under a
         `ledger_parent` (tenant quota) verification labels are metered
         against the parent too, so a quota-capped JT query fails loudly
-        instead of labeling past its tenant's allowance."""
+        instead of labeling past its tenant's allowance. One pinned
+        `CorpusState` spans both stages."""
+        st = self._state if state is None else state
         rt = SUPGQuery(target="recall", gamma=query.gamma_recall,
                        delta=query.delta, budget=query.stage_budget,
                        method=query.method)
         cand = yield from self._run_plan(key, rt,
                                          chunk_records=chunk_records,
-                                         ledger_parent=ledger_parent)
-        vledger = BudgetLedger(self.n_total, parent=ledger_parent)
+                                         ledger_parent=ledger_parent,
+                                         state=st)
+        vledger = BudgetLedger(st.n_total, parent=ledger_parent)
         out = pipeline.IndexSink() if sink is None else sink
         chunk = int(chunk_records or self.chunk_records)
-        sizes = [int(s.shape[0]) for s in self.shards]
+        sizes = [int(s.shape[0]) for s in st.shards]
         out.open(sizes)
         try:
-            for sh in range(len(self.shards)):
+            for sh in range(len(st.shards)):
                 local = cand.indices(sh)
                 for start in range(0, local.size, chunk):
                     seg = local[start:start + chunk]
-                    labels = yield OracleRequest(self.offsets[sh] + seg,
+                    labels = yield OracleRequest(st.offsets[sh] + seg,
                                                  vledger)
                     out.emit(sh, seg[labels > 0.5])
         except BaseException:
@@ -650,14 +836,15 @@ class SelectionEngine:
             sink=out, shard_sizes=sizes, counts=counts)
 
     def _plan_for(self, key, query, *, sink=None, chunk_records=None,
-                  ledger_parent=None):
+                  ledger_parent=None, state=None):
         if isinstance(query, JointSUPGQuery):
             return self._run_joint_plan(key, query, sink=sink,
                                         chunk_records=chunk_records,
-                                        ledger_parent=ledger_parent)
+                                        ledger_parent=ledger_parent,
+                                        state=state)
         return self._run_plan(key, query, sink=sink,
                               chunk_records=chunk_records,
-                              ledger_parent=ledger_parent)
+                              ledger_parent=ledger_parent, state=state)
 
     # -- query entry points -----------------------------------------------
 
@@ -779,7 +966,9 @@ class SelectionEngine:
 
     def _emission_walk(self, tau: float, pos: np.ndarray,
                        sink: Optional[pipeline.SelectionSink],
-                       chunk_records: Optional[int]):
+                       chunk_records: Optional[int],
+                       state: Optional[CorpusState] = None,
+                       shard_ids: Optional[Sequence[int]] = None):
         """Prepare the streamed {A >= tau} ∪ labeled-positives emission.
 
         Opens the sink, folds the labeled positives *below* tau (those
@@ -797,29 +986,38 @@ class SelectionEngine:
         positive still folds in, exactly like the materialized path
         selected it. If the fold itself dies (e.g. a CallbackSink consumer
         raised) the sink is released before the error propagates.
+
+        `state` pins the corpus epoch walked; `shard_ids` restricts the
+        walk to those shards only (the live plane's standing re-emission
+        over appended shards — the sink still opens with the epoch's full
+        shard sizes, so global offsets stay correct).
         """
+        st = self._state if state is None else state
         sink = pipeline.IndexSink() if sink is None else sink
         chunk = int(chunk_records or self.chunk_records)
-        sizes = [int(s.shape[0]) for s in self.shards]
-        plan = (self.plan if chunk == self.chunk_records
-                else pipeline.ChunkPlan(sizes, chunk))
+        sizes = [int(s.shape[0]) for s in st.shards]
+        if shard_ids is not None:
+            plan = pipeline.ChunkPlan(sizes, chunk, shard_ids=shard_ids)
+        else:
+            plan = (st.plan if chunk == self.chunk_records
+                    else pipeline.ChunkPlan(sizes, chunk))
         sink.open(sizes)
         try:
             if pos.size:
-                below = pos[self.score_at(pos) < tau]
+                below = pos[self.score_at(pos, state=st) < tau]
                 if below.size:
-                    sh_ids = np.searchsorted(self.offsets, below,
+                    sh_ids = np.searchsorted(st.offsets, below,
                                              side="right") - 1
                     for shard_id in np.unique(sh_ids):
                         loc = (below[sh_ids == shard_id]
-                               - self.offsets[shard_id])
+                               - st.offsets[shard_id])
                         sink.fold(int(shard_id), np.unique(loc))
         except BaseException:
             _close_quietly(sink)
             raise
 
         def emit_span(span):
-            block = self.shards[span.shard_id][span.start:span.stop]
+            block = st.shards[span.shard_id][span.start:span.stop]
             local = select_ops.threshold_select(
                 block, tau, backend=self.select_backend)
             if local.size:
@@ -837,11 +1035,14 @@ class SelectionEngine:
     def _emit_selection(self, tau: float, pos: np.ndarray,
                         oracle_calls: int,
                         sink: Optional[pipeline.SelectionSink],
-                        chunk_records: Optional[int]) -> ShardedSelection:
+                        chunk_records: Optional[int],
+                        state: Optional[CorpusState] = None) \
+            -> ShardedSelection:
         """Synchronous emission: `_emission_walk` run to completion on the
         engine's pool — the non-scheduled path (and benches)."""
         walk, out_sink, finish = self._emission_walk(tau, pos, sink,
-                                                     chunk_records)
+                                                     chunk_records,
+                                                     state=state)
         err = pipeline.run_fused([walk], self.pool)[0]
         if err is not None:
             # Emission died (e.g. a CallbackSink consumer raised): release
@@ -850,7 +1051,7 @@ class SelectionEngine:
             raise err
         return finish(oracle_calls)
 
-    def _uniform_in_region(self, key, s, tau):
+    def _uniform_in_region(self, key, s, tau, state=None):
         """Uniform draws from {A >= tau} across shards, chunk-streamed.
 
         One ChunkPlan counting pass (threaded over spans) yields per-chunk
@@ -869,7 +1070,8 @@ class SelectionEngine:
         which keeps the estimator valid (D' restriction is an efficiency
         device, never a correctness requirement).
         """
-        plan = self.plan
+        st = self._state if state is None else state
+        plan = st.plan
         spans = list(plan)
 
         def count_span(span):
@@ -877,18 +1079,18 @@ class SelectionEngine:
             # uses: any dtype/backend rounding disagreement between the two
             # would desynchronize ranks from region sizes.
             return select_ops.threshold_select(
-                self.shards[span.shard_id][span.start:span.stop], tau,
+                st.shards[span.shard_id][span.start:span.stop], tau,
                 backend=self.select_backend).size
 
         span_counts = self.pool.map(count_span, spans)
         per_shard = [np.zeros(plan.num_chunks(sh), np.int64)
-                     for sh in range(len(self.shards))]
+                     for sh in range(len(st.shards))]
         for span, c in zip(spans, span_counts):
             per_shard[span.shard_id][span.chunk_id] = c
         counts = np.asarray([pc.sum() for pc in per_shard], np.float64)
         total = counts.sum()
         if total == 0:
-            idx = jax.random.randint(key, (s,), 0, self.n_total)
+            idx = jax.random.randint(key, (s,), 0, st.n_total)
             return np.asarray(idx, np.int64)
         mass = counts / total
         k_alloc, k_draw = jax.random.split(key)
@@ -896,7 +1098,7 @@ class SelectionEngine:
         alloc = np.asarray(jax.random.categorical(
             k_alloc, jnp.log(jnp.asarray(mass, jnp.float32)), shape=(s,)))
         out = np.empty(s, np.int64)
-        dkeys = jax.random.split(k_draw, len(self.shards))
+        dkeys = jax.random.split(k_draw, len(st.shards))
         work = []    # (shard_id, chunk_id, positions, in-chunk region ranks)
         for sh, seg in self._group_sorted(alloc,
                                           np.argsort(alloc, kind="stable")):
@@ -916,9 +1118,9 @@ class SelectionEngine:
             sh, ci, pos, ranks = item
             start = ci * chunk
             region = select_ops.threshold_select(
-                self.shards[sh][start:start + chunk], tau,
+                st.shards[sh][start:start + chunk], tau,
                 backend=self.select_backend)
-            out[pos] = self.offsets[sh] + start + region[ranks]
+            out[pos] = st.offsets[sh] + start + region[ranks]
 
         self.pool.map(resolve, work)
         return out
@@ -1117,7 +1319,8 @@ class QuerySession:
     def submit(self, query, *, key=None,
                sink: Optional[pipeline.SelectionSink] = None,
                chunk_records: Optional[int] = None,
-               ledger_parent: Optional[BudgetLedger] = None) -> QueryHandle:
+               ledger_parent: Optional[BudgetLedger] = None,
+               state: Optional[CorpusState] = None) -> QueryHandle:
         """Enqueue one RT/PT/JT query; returns its `QueryHandle`.
 
         `key` defaults to PRNGKey(0) (pass distinct keys for distinct
@@ -1126,13 +1329,35 @@ class QuerySession:
         (`concurrency` caps the two cohorts' combined size).
         `ledger_parent` chains the query's budget ledger under a shared
         quota ledger — the serving plane passes each tenant's here.
+        `state` pins the plan to a specific corpus epoch (`engine.pin()`)
+        so a caller racing live-plane appends controls exactly which
+        corpus the query certifies; default is the epoch current at the
+        plan's first step.
         """
         if self._closed:
             raise RuntimeError("QuerySession is closed")
         handle = QueryHandle(self, query, sink)
         plan = self.engine._plan_for(key, query, sink=sink,
                                      chunk_records=chunk_records,
-                                     ledger_parent=ledger_parent)
+                                     ledger_parent=ledger_parent,
+                                     state=state)
+        self._queued.append((handle, plan))
+        return handle
+
+    def submit_plan(self, plan: Generator, *, query=None,
+                    sink: Optional[pipeline.SelectionSink] = None) \
+            -> QueryHandle:
+        """Enqueue a pre-built resumable plan; returns its `QueryHandle`.
+
+        The escape hatch for plans that are not SUPG queries but speak
+        the same yield protocol (`OracleRequest` / `pipeline.ChunkWalk`):
+        the live plane's standing re-emission walks enter here, joining
+        the same cohorts, walk fusion, and coalesced drains as ordinary
+        queries. `query`/`sink` only annotate the returned handle.
+        """
+        if self._closed:
+            raise RuntimeError("QuerySession is closed")
+        handle = QueryHandle(self, query, sink)
         self._queued.append((handle, plan))
         return handle
 

@@ -188,6 +188,50 @@ def defensive_chunk_mass(raw: np.ndarray, sizes: np.ndarray, z: float,
             + kappa * np.asarray(sizes, np.float64) / n_total)
 
 
+def append_cdf(cum: np.ndarray, new_masses) -> np.ndarray:
+    """Extend an *unnormalized* float64 chunk-mass prefix sum in place of a
+    full rebuild — the live plane's CDF-append path.
+
+    `np.cumsum` is a sequential left fold (``c[i] = c[i-1] + m[i]``), so
+    continuing the fold from the existing tail reproduces, bit for bit, the
+    prefix sum a cold pass over the concatenated mass vector would compute.
+    That identity is what lets incremental ingestion extend per-shard
+    chunk-mass CDFs without re-reading any old chunk while staying
+    bitwise-equal to a cold engine rebuild (`tests/test_live.py` property-
+    tests the split-vs-full equality).
+
+    >>> full = np.cumsum(np.asarray([0.3, 0.2, 0.5, 0.1], np.float64))
+    >>> grown = append_cdf(np.cumsum(np.asarray([0.3, 0.2], np.float64)),
+    ...                    [0.5, 0.1])
+    >>> bool(np.array_equal(full, grown))
+    True
+    """
+    new = np.asarray(new_masses, np.float64)
+    cum = np.asarray(cum, np.float64)
+    if cum.size == 0:
+        return np.cumsum(new)
+    if new.size == 0:
+        return cum.copy()
+    # Seed the cumsum with the existing tail so the fold *continues* —
+    # ``cum[-1] + np.cumsum(new)`` would regroup the additions and drift.
+    return np.concatenate(
+        [cum, np.cumsum(np.concatenate([cum[-1:], new]))[1:]])
+
+
+def chunk_mass_cdf(raw: np.ndarray, sizes: np.ndarray, z: float,
+                   kappa: float, n_total: int) -> Tuple[float, np.ndarray]:
+    """One shard's (total mass, normalized chunk-mass CDF) for the
+    hierarchical draw — the single construction path shared by cold engine
+    builds and the ingest plane's epoch extensions, so both produce
+    bit-identical sampling state from identical chunk masses."""
+    m_c = defensive_chunk_mass(raw, sizes, z, kappa, n_total)
+    total = float(m_c.sum())
+    if not total > 0:
+        raise ValueError(
+            "shard has no sampling mass (kappa=0 with an all-zero proxy?)")
+    return total, append_cdf(np.empty(0, np.float64), m_c) / total
+
+
 def defensive_probs(scores_chunk, scheme: str, z: float, kappa: float,
                     n_total: int) -> np.ndarray:
     """Global draw probabilities p(x) for the records of one chunk.

@@ -81,13 +81,32 @@ class ChunkPlan:
     [(0, 0, 0, 2), (0, 1, 2, 4), (0, 2, 4, 5), (1, 0, 0, 2), (1, 1, 2, 3)]
     >>> plan.total_chunks
     5
+
+    A plan may be restricted to a subset of its shards (`shard_ids`) while
+    keeping the full corpus addressing — the live plane's standing-query
+    re-emissions walk only newly appended shards this way, and plans with
+    equal restriction still fuse:
+
+    >>> [(s.shard_id, s.start, s.stop)
+    ...  for s in ChunkPlan([5, 3], 2, shard_ids=[1])]
+    [(1, 0, 2), (1, 2, 3)]
     """
 
-    def __init__(self, shard_sizes: Sequence[int], chunk_records: int):
+    def __init__(self, shard_sizes: Sequence[int], chunk_records: int,
+                 shard_ids: Optional[Sequence[int]] = None):
         if chunk_records <= 0:
             raise ValueError("chunk_records must be positive")
         self.shard_sizes = [int(n) for n in shard_sizes]
         self.chunk_records = int(chunk_records)
+        if shard_ids is None:
+            self.shard_ids = tuple(range(len(self.shard_sizes)))
+        else:
+            ids = sorted({int(i) for i in shard_ids})
+            if ids and (ids[0] < 0 or ids[-1] >= len(self.shard_sizes)):
+                raise ValueError(
+                    f"shard_ids {ids} out of range for "
+                    f"{len(self.shard_sizes)} shards")
+            self.shard_ids = tuple(ids)
 
     def num_chunks(self, shard_id: int) -> int:
         n = self.shard_sizes[shard_id]
@@ -95,7 +114,7 @@ class ChunkPlan:
 
     @property
     def total_chunks(self) -> int:
-        return sum(self.num_chunks(sh) for sh in range(len(self.shard_sizes)))
+        return sum(self.num_chunks(sh) for sh in self.shard_ids)
 
     def shard_spans(self, shard_id: int) -> List[ChunkSpan]:
         n = self.shard_sizes[shard_id]
@@ -104,14 +123,16 @@ class ChunkPlan:
                 for ci, o in enumerate(range(0, n, c))]
 
     def __iter__(self) -> Iterator[ChunkSpan]:
-        for shard_id in range(len(self.shard_sizes)):
+        for shard_id in self.shard_ids:
             yield from self.shard_spans(shard_id)
 
     @property
-    def geometry(self) -> Tuple[Tuple[int, ...], int]:
+    def geometry(self) -> Tuple[Tuple[int, ...], int, Tuple[int, ...]]:
         """Hashable span-structure identity: two plans with equal geometry
-        produce identical span lists and can therefore fuse."""
-        return (tuple(self.shard_sizes), self.chunk_records)
+        produce identical span lists and can therefore fuse. Shard
+        restriction is part of the identity — a restricted walk must not
+        share spans with a full-corpus one."""
+        return (tuple(self.shard_sizes), self.chunk_records, self.shard_ids)
 
     @staticmethod
     def fuse(plans: Sequence["ChunkPlan"]) \
@@ -361,19 +382,60 @@ class ScoreStore:
             self._arr = np.memmap(self.path, np.float32, mode,
                                   shape=(num_records,))
         self._num_scored: Optional[int] = None
+        # write()/append() bump _version under _lock; num_scored's chunked
+        # scan runs lock-free and commits only if the version it started
+        # from is still current — see num_scored for the race contract.
+        self._lock = threading.Lock()
+        self._version = 0
 
     def write(self, start: int, scores: np.ndarray):
+        """Overwrite `scores.size` records at `start` (atomic w.r.t. the
+        `num_scored` cache: a racing count can never commit a stale scan
+        over this write)."""
         scores = np.asarray(scores)
-        n = int(self._arr.shape[0])
-        # Reject out-of-range writes outright — memmap slicing would
-        # silently truncate them and scoring jobs would lose records.
-        if start < 0 or start + scores.shape[0] > n:
-            raise ValueError(
-                f"write [{start}, {start + scores.shape[0]}) out of range "
-                f"for store of {n} records")
-        self._arr[start:start + scores.shape[0]] = scores
-        self._arr.flush()
-        self._num_scored = None   # invalidate the cached scan
+        with self._lock:
+            n = int(self._arr.shape[0])
+            # Reject out-of-range writes outright — memmap slicing would
+            # silently truncate them and scoring jobs would lose records.
+            if start < 0 or start + scores.shape[0] > n:
+                raise ValueError(
+                    f"write [{start}, {start + scores.shape[0]}) out of "
+                    f"range for store of {n} records")
+            self._arr[start:start + scores.shape[0]] = scores
+            self._arr.flush()
+            self._version += 1
+            self._num_scored = None   # invalidate the cached scan
+
+    def append(self, scores: np.ndarray) -> int:
+        """Grow the store by `scores.size` records at the tail; returns the
+        new record count.
+
+        The backing file is extended and remapped; existing `.scores`
+        views (e.g. shards pinned by an in-flight engine snapshot) keep
+        their old length and stay valid — the file only ever grows, and
+        records below the old tail are untouched. The `num_scored` cache
+        is delta-updated in place (appends know exactly how many scored
+        records they add), so a warm cache never pays a rescan — the
+        only cache an append invalidates is none at all.
+        """
+        scores = np.asarray(scores, np.float32)
+        k = int(scores.shape[0])
+        with self._lock:
+            old = self._arr
+            n = int(old.shape[0])
+            if k:
+                old.flush()
+                with open(self.path, "r+b") as f:
+                    f.truncate((n + k) * np.dtype(np.float32).itemsize)
+                grown = np.memmap(self.path, np.float32, "r+",
+                                  shape=(n + k,))
+                grown[n:] = scores
+                grown.flush()
+                self._arr = grown
+            self._version += 1
+            if self._num_scored is not None:
+                self._num_scored += int((scores >= 0).sum())
+            return n + k
 
     def read(self, start: int = 0, count: Optional[int] = None) -> np.ndarray:
         end = None if count is None else start + count
@@ -388,20 +450,45 @@ class ScoreStore:
     def __len__(self) -> int:
         return self._arr.shape[0]
 
+    def _count_span(self, arr: np.ndarray, start: int, stop: int) -> int:
+        """Scored-record count over one span of `arr` (the seam
+        `tests/test_data.py`'s race regression overrides to land a write
+        mid-scan)."""
+        return int((arr[start:stop] >= 0).sum())
+
     @property
     def num_scored(self) -> int:
         """Count of scored (non-sentinel) records, cached between writes.
 
         The scan itself is chunked so even a 1e9-record store is counted
         with O(chunk) peak memory; repeat reads are O(1) until the next
-        `write` invalidates the cache.
+        `write` invalidates the cache (appends delta-update it instead).
+
+        Concurrency contract: the chunked scan runs *outside* the store
+        lock (it may touch gigabytes), but it only commits to the cache —
+        and only returns — if the store's version is unchanged from when
+        the scan started. A `write()` or `append()` landing mid-scan bumps
+        the version, so the stale count is discarded and the scan retries;
+        the epoch-pinning logic layered on top (`repro.live`) can therefore
+        never observe a count that mixes pre- and post-write state.
         """
-        if self._num_scored is None:
-            plan = ChunkPlan([int(self._arr.shape[0])], CHUNK_RECORDS)
-            self._num_scored = sum(
-                int((self._arr[sp.start:sp.stop] >= 0).sum())
-                for sp in plan)
-        return self._num_scored
+        while True:
+            with self._lock:
+                if self._num_scored is not None:
+                    return self._num_scored
+                v0 = self._version
+                arr = self._arr
+            plan = ChunkPlan([int(arr.shape[0])], CHUNK_RECORDS)
+            total = sum(self._count_span(arr, sp.start, sp.stop)
+                        for sp in plan)
+            with self._lock:
+                if self._num_scored is not None:
+                    return self._num_scored
+                if self._version == v0:
+                    self._num_scored = total
+                    return total
+                # a write/append landed mid-scan: the count may be stale
+                # in either direction — rescan against the new version.
 
 
 # ---------------------------------------------------------------------------

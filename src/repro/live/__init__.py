@@ -1,0 +1,28 @@
+"""Live corpus plane — incremental ingestion, standing queries, drift watch.
+
+The paper's guarantees (§5) are certified against a frozen, fully
+proxy-scored corpus. This package keeps them meaningful when the corpus
+is *not* frozen:
+
+  IngestPlane       append score shards and delta-update engine state
+                    (sketches merge additively, CDFs extend in place)
+                    under a versioned epoch — never a cold rebuild
+  StandingQuery /   registered queries whose sinks re-emit over newly
+  StandingRegistry  appended shards each epoch, scheduled through the
+                    same `QuerySession` pump as ordinary queries
+  DriftSentinel /   §6.2 calibration-drift monitor: importance-weighted
+  DriftWatch /      match-rate probes against a certified reference, and
+  DriftReport       auto re-validation through the shared oracle channel
+
+`repro.serve.SelectionServer` wires all three behind `append()` /
+`subscribe()`; this package is the engine-level API underneath.
+"""
+from repro.live.ingest import IngestPlane
+from repro.live.sentinel import DriftReport, DriftSentinel, DriftWatch
+from repro.live.standing import StandingQuery, StandingRegistry
+
+__all__ = [
+    "IngestPlane",
+    "StandingQuery", "StandingRegistry",
+    "DriftSentinel", "DriftWatch", "DriftReport",
+]

@@ -42,12 +42,16 @@ import threading
 import time
 from typing import Deque, Dict, List, Optional, Tuple
 
+import jax
+
 from repro.core.engine import (QueryHandle, QuerySession, SelectionEngine,
                                ShardedSelection)
 from repro.core.oracle import BatchingOracle, BudgetLedger, OracleClient
 from repro.core.resilience import (CircuitBreaker, CircuitOpenError,
                                    RetryPolicy)
 from repro.data import pipeline
+from repro.live import (DriftSentinel, IngestPlane, StandingQuery,
+                        StandingRegistry)
 from repro.serve.limiter import TokenBucket
 from repro.serve.stats import LatencyHistogram, ServerStats, TenantStats
 
@@ -161,6 +165,18 @@ class SelectionServer:
         `default_quota` (None = unmetered).
     sessions: size of the `QuerySession` pool. All sessions share the
         one channel/cache; more sessions only add scheduling isolation.
+    sentinel_probe_budget, sentinel_sigma: the drift sentinel's probe
+        size (oracle labels per calibration probe) and trigger threshold
+        (see `repro.live.DriftSentinel`) — used for subscriptions made
+        with ``audit=True``.
+
+    Live corpus surface: `append(shards)` grows the hosted corpus one
+    epoch at a time (delta-update, never a rebuild — in-flight queries
+    keep their pinned epoch), and `subscribe(query, ...)` registers a
+    standing query that certifies once and re-emits over every appended
+    shard; with ``audit=True`` the drift sentinel probes each new epoch
+    and auto re-validates tau through the shared channel when the §6.2
+    drift statistic trips.
     """
 
     def __init__(self, engine: SelectionEngine, oracle_fn, *,
@@ -175,7 +191,9 @@ class SelectionServer:
                  quotas: Optional[Dict[str, int]] = None,
                  default_quota: Optional[int] = None,
                  sessions: int = 1,
-                 own_engine: bool = True):
+                 own_engine: bool = True,
+                 sentinel_probe_budget: int = 2048,
+                 sentinel_sigma: float = 4.0):
         self.engine = engine
         self._own_engine = bool(own_engine)
         self.bucket: Optional[TokenBucket] = None
@@ -212,6 +230,22 @@ class SelectionServer:
         self._default_quota = default_quota
         self._sessions: List[QuerySession] = [
             engine.session(self.channel) for _ in range(max(1, sessions))]
+
+        # Live corpus plane: ingestion, standing queries, drift sentinel.
+        # The registry rides the first session so re-emission walks fuse
+        # with ordinary query rounds; the sentinel shares the channel so
+        # probe labels join the common cache and metering.
+        self.plane = IngestPlane(engine)
+        self._registry = StandingRegistry(self.plane, self._sessions[0])
+        self._sentinel = DriftSentinel(engine, self.channel,
+                                       probe_budget=sentinel_probe_budget,
+                                       sigma=sentinel_sigma)
+        # Handed from subscribe() (any thread) to the scheduler under
+        # the condition variable; everything below it is scheduler-owned.
+        self._subscriptions: List[Tuple[StandingQuery, _Tenant, bool]] = []
+        self._awaiting_watch: List[Tuple[StandingQuery, object]] = []
+        # [sq, DriftWatch, base_key, last_audited_epoch] per audited query
+        self._watches: List[list] = []
 
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
@@ -281,6 +315,55 @@ class SelectionServer:
             self._cond.notify_all()
             return handle
 
+    def append(self, shards, *, use_kernel: Optional[bool] = None) -> int:
+        """Append score shard(s) to the hosted corpus; returns the new
+        epoch number.
+
+        Delta-updates the engine in place (only the appended records are
+        sketched); queries already in flight keep the epoch they pinned
+        at submit. Standing queries catch up on the scheduler's next
+        turn, and audited subscriptions get a sentinel pass over the new
+        epoch before their re-emission runs. Thread-safe.
+        """
+        with self._cond:
+            if self._closing or self._closed:
+                raise ServerClosedError("SelectionServer is closed")
+            if self._fatal is not None:
+                raise ServerClosedError(
+                    f"SelectionServer scheduler died: {self._fatal!r}")
+        # Outside the lock: sketching the new shards may fan out over the
+        # engine's worker pool, and clients must not block on it.
+        epoch = self.plane.append(shards, use_kernel=use_kernel)
+        with self._cond:
+            self._cond.notify_all()
+        return epoch
+
+    def subscribe(self, query, *, tenant: str = "default", key=None,
+                  sink: Optional[pipeline.SelectionSink] = None,
+                  audit: bool = False) -> StandingQuery:
+        """Register a standing query; returns its `StandingQuery`.
+
+        The query certifies once on the current epoch (await it with
+        ``sq.wait_certified()``), then every `append` triggers a catch-up
+        re-emission of ``{A >= tau}`` over exactly the appended shards
+        into `sink`. With ``audit=True`` the drift sentinel probes each
+        new epoch first and auto re-validates tau (fresh budget, same
+        query) when the drift statistic trips — see
+        `repro.live.DriftSentinel`. Oracle labels (certification, probes,
+        re-validations) are metered against `tenant`'s quota.
+        """
+        with self._cond:
+            if self._closing or self._closed:
+                raise ServerClosedError("SelectionServer is closed")
+            if self._fatal is not None:
+                raise ServerClosedError(
+                    f"SelectionServer scheduler died: {self._fatal!r}")
+            ten = self._tenant_locked(tenant)
+            sq = StandingQuery(query, key, sink)
+            self._subscriptions.append((sq, ten, bool(audit)))
+            self._cond.notify_all()
+            return sq
+
     def stats(self) -> ServerStats:
         """One consistent `ServerStats` snapshot (cheap; lock-guarded)."""
         with self._lock:
@@ -314,6 +397,13 @@ class SelectionServer:
             snap.rounds += sess.stats.rounds
             snap.drains += sess.stats.drains
             snap.overlap_hidden_s += sess.stats.overlap_hidden_s
+        snap.epochs = self.plane.appends
+        snap.records_ingested = self.plane.records_ingested
+        snap.standing_queries = len(self._registry.standing)
+        snap.standing_emissions = self._registry.emissions
+        snap.sentinel_checks = self._sentinel.checks
+        snap.sentinel_triggers = self._sentinel.triggers
+        snap.revalidations = self._sentinel.revalidations
         return snap
 
     # -- scheduler thread -------------------------------------------------
@@ -351,6 +441,22 @@ class SelectionServer:
             return None
         return max(0.0, self._queue[0]._deadline - time.monotonic())
 
+    def _live_work(self) -> bool:
+        """True while the live plane has work the scheduler must drive:
+        in-flight certifications/re-emissions, certified standing queries
+        behind the current epoch, watches owed a sentinel pass, or a
+        certification whose watch is ready to baseline."""
+        if self._registry.has_pending():
+            return True
+        epoch = self.plane.epoch
+        if any(sq.certified and not sq._busy and sq.epoch < epoch
+               for sq in self._registry.standing):
+            return True
+        if any(entry[3] < epoch for entry in self._watches):
+            return True
+        return any(sq._certified.is_set()
+                   for sq, _ in self._awaiting_watch)
+
     def _loop(self) -> None:
         try:
             self._run_scheduler()
@@ -371,7 +477,9 @@ class SelectionServer:
                 if self._abandon:
                     return
                 admitted = self._admit_locked()
-                if not admitted and not self._inflight:
+                subs, self._subscriptions = self._subscriptions, []
+                if not admitted and not subs and not self._inflight \
+                        and not self._live_work():
                     if self._closing and not self._queue:
                         return
                     self._cond.wait(self._next_wait_locked())
@@ -379,6 +487,47 @@ class SelectionServer:
             # Session work runs outside the server lock: plans touch only
             # engine/channel state, and clients must be able to submit
             # (and read stats) while rounds are in flight.
+            for sq, ten, audit in subs:
+                self._registry.activate(sq, ledger_parent=ten.ledger)
+                if audit:
+                    base = (sq.key if sq.key is not None
+                            else jax.random.PRNGKey(0))
+                    self._awaiting_watch.append(
+                        (sq, jax.random.fold_in(base, 0x5E47)))
+            if self._awaiting_watch:
+                # Promote certified subscriptions to sentinel watches;
+                # the reference probe adopts the certified tau (no extra
+                # query budget spent).
+                keep = []
+                for sq, base in self._awaiting_watch:
+                    if not sq._certified.is_set():
+                        keep.append((sq, base))
+                        continue
+                    if sq._error is None:
+                        watch = self._sentinel.watch(sq.query, key=base,
+                                                     tau=sq.tau)
+                        self._watches.append([sq, watch, base, watch.epoch])
+                self._awaiting_watch = keep
+            # Sentinel audits run *before* the registry pumps, so a
+            # drifted epoch is re-emitted with the re-validated tau.
+            epoch = self.plane.epoch
+            for entry in self._watches:
+                sq, watch, base, last = entry
+                if epoch <= last:
+                    continue
+                try:
+                    report = self._sentinel.audit(
+                        watch, key=jax.random.fold_in(base, epoch))
+                except BaseException as err:  # noqa: BLE001 — audit must
+                    # not kill the scheduler: a failed probe (oracle
+                    # fault, quota overrun) is recorded on the standing
+                    # query and the epoch is skipped, not retried hot.
+                    sq.last_error = err
+                else:
+                    if report.revalidated:
+                        sq.update_tau(watch.tau)
+                entry[3] = epoch
+            self._registry.pump()
             for h, ten in admitted:
                 sess = min(self._sessions, key=lambda s: s.in_flight)
                 qh = sess.submit(h.query, key=h._key, sink=h._sink,
@@ -387,6 +536,7 @@ class SelectionServer:
                 self._inflight.append((h, qh, sess))
             for sess in self._sessions:
                 sess.step()
+            self._registry.poll()
             done = [(h, qh) for h, qh, _ in self._inflight if qh.done]
             if done:
                 self._inflight = [t for t in self._inflight

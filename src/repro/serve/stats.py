@@ -134,6 +134,13 @@ class ServerStats:
     batch_sheds: int = 0             # micro-batches shed by the open circuit
     circuit_state: str = "closed"    # breaker state at snapshot time
     circuit_opens: int = 0           # closed -> open transitions so far
+    epochs: int = 0                  # corpus appends installed (live plane)
+    records_ingested: int = 0        # records those appends added
+    standing_queries: int = 0        # registered standing queries
+    standing_emissions: int = 0      # catch-up re-emission walks completed
+    sentinel_checks: int = 0         # drift probes run
+    sentinel_triggers: int = 0       # probes that flagged drift
+    revalidations: int = 0           # re-validation queries auto-submitted
 
     @property
     def admitted(self) -> int:
@@ -178,6 +185,11 @@ class ServerStats:
             f"circuit {self.circuit_state} "
             f"({self.circuit_opens} opens, "
             f"{self.circuit_shed} admissions shed)",
+            f"live:    {self.epochs} epochs, {self.records_ingested} "
+            f"records ingested, {self.standing_queries} standing queries "
+            f"({self.standing_emissions} re-emissions), sentinel "
+            f"{self.sentinel_checks} checks / {self.sentinel_triggers} "
+            f"triggers / {self.revalidations} re-validations",
         ]
         for name in sorted(self.tenants):
             t = self.tenants[name]

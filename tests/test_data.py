@@ -94,6 +94,47 @@ def test_score_store_num_scored_cached(tmp_path):
     assert store.num_scored == 10
 
 
+def test_score_store_append_grows_and_delta_updates_count(tmp_path):
+    """append() extends the backing file in place, keeps pre-append views
+    readable, and delta-updates the num_scored cache (no rescan)."""
+    store = ScoreStore(tmp_path / "s.f32", 8, create=True)
+    store.write(0, np.full(8, 0.5, np.float32))
+    assert store.num_scored == 8               # populate the cache
+    old_view = store._arr
+    assert store.append(np.array([0.1, -1.0, 0.9], np.float32)) == 11
+    assert store._num_scored == 10             # delta-updated, not rescanned
+    assert store.num_scored == 10              # -1 stays the unscored sentinel
+    np.testing.assert_allclose(store.read(8, 3), [0.1, -1.0, 0.9])
+    # a reader holding the pre-append memmap still sees its records
+    np.testing.assert_allclose(np.asarray(old_view[:8]), np.full(8, 0.5))
+    # empty append is a no-op epoch: length unchanged, cache intact
+    assert store.append(np.empty(0, np.float32)) == 11
+    assert store.num_scored == 10
+
+
+def test_score_store_num_scored_not_stale_under_racing_write(tmp_path):
+    """Regression: a write() landing while num_scored scans must not let
+    a pre-write count be committed to the cache. The scan runs outside
+    the store lock (so writers are never blocked on O(n) counting); the
+    version check must detect the interleaved write and rescan."""
+    class RacingStore(ScoreStore):
+        raced = False
+
+        def _count_span(self, arr, start, stop):
+            out = super()._count_span(arr, start, stop)
+            if not self.raced:
+                # Interleave a write after the span was counted but
+                # before the scan commits — the classic stale-cache race.
+                self.raced = True
+                self.write(0, np.full(4, 0.5, np.float32))
+            return out
+
+    store = RacingStore(tmp_path / "s.f32", 32, create=True)
+    assert store.num_scored == 4               # rescan saw the write
+    assert store._num_scored == 4              # and the cache is not stale
+    assert store.num_scored == 4
+
+
 def test_score_store_write_rejects_out_of_range(tmp_path):
     """Regression: memmap slicing used to silently truncate out-of-range
     writes; they must be rejected outright."""

@@ -18,6 +18,9 @@ DOC_MODULES = [
     "repro.core.oracle",
     "repro.core.resilience",
     "repro.data.pipeline",
+    "repro.live.ingest",
+    "repro.live.standing",
+    "repro.live.sentinel",
     "repro.serve.limiter",
     "repro.serve.stats",
     "repro.serve.server",
