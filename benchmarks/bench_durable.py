@@ -1,0 +1,105 @@
+"""Durability-plane benchmarks: journal overhead, cold-recovery speed.
+
+Rows:
+  journal_append_overhead — a 1e5-record append through `IngestPlane`
+                            with the full durability path (spool shards
+                            as CRC'd .npy files + fsync'd journal frame)
+                            vs the same append unjournaled; derived
+                            carries the paired ratio (acceptance
+                            ceiling: <= 1.3x — the fsync must not
+                            dominate the delta-sketch work it protects)
+  recover_1e6             — replay a ten-record journal (1e6 records
+                            total) into a fresh engine via
+                            `DurabilityPlane.replay_into`; derived
+                            carries the per-epoch replay time and the
+                            cold-rebuild time it substitutes for
+
+Journal overhead is paired on purpose: both sides run the identical
+delta-append, same process, interleaved, so the ratio isolates the
+spool + fsync cost rather than cache warmth.
+"""
+import os
+import tempfile
+import time
+
+import numpy as np
+
+
+def _chunks(n_chunks=10, chunk=100_000, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.beta(0.05, 1.0, chunk).astype(np.float32)
+            for _ in range(n_chunks)]
+
+
+def bench_journal_overhead():
+    """Paired journaled vs unjournaled append cost (ratio must stay small)."""
+    from repro.core.engine import SelectionEngine
+    from repro.durable import DurabilityPlane
+    from repro.live import IngestPlane
+
+    chunks = _chunks()
+    kw = dict(num_bins=4096, use_kernel=False, chunk_records=1 << 18,
+              workers=1)
+    t_plain, t_journaled = 0.0, 0.0
+    with tempfile.TemporaryDirectory() as root:
+        dur = DurabilityPlane(os.path.join(root, "dur"))
+        with SelectionEngine(chunks[:1], **kw) as plain_eng, \
+                SelectionEngine(chunks[:1], **kw) as dur_eng:
+            plain, durable = IngestPlane(plain_eng), IngestPlane(dur_eng)
+            for ch in chunks[1:]:           # interleaved pairs
+                t0 = time.time()
+                plain.append(ch)
+                t_plain += time.time() - t0
+                t0 = time.time()
+                arrs = dur.record_append(ch, epoch=durable.epoch + 1)
+                durable.append(arrs)
+                t_journaled += time.time() - t0
+            assert dur_eng.n_total == plain_eng.n_total
+        dur.close()
+    n = len(chunks) - 1
+    ratio = t_journaled / t_plain
+    print(f"journal_append_overhead,{t_journaled / n * 1e6:.0f},"
+          f"appends={n};chunk=1e5;"
+          f"unjournaled_us={t_plain / n * 1e6:.0f};ratio={ratio:.2f}x")
+
+
+def bench_recover():
+    """Cold recovery: journal replay of 1e6 records into a fresh engine."""
+    from repro.core.engine import SelectionEngine
+    from repro.durable import DurabilityPlane
+    from repro.live import IngestPlane
+
+    chunks = _chunks()
+    kw = dict(num_bins=4096, use_kernel=False, chunk_records=1 << 18,
+              workers=1)
+    with tempfile.TemporaryDirectory() as root:
+        dur = DurabilityPlane(os.path.join(root, "dur"))
+        with SelectionEngine(chunks[:1], **kw) as eng:
+            plane = IngestPlane(eng)
+            for ch in chunks[1:]:
+                plane.append(dur.record_append(ch, epoch=plane.epoch + 1))
+
+        t0 = time.time()
+        with SelectionEngine(chunks[:1], **kw) as eng:
+            plane = IngestPlane(eng)
+            replayed = dur.replay_into(plane)
+            assert replayed == len(chunks) - 1
+            assert eng.n_total == sum(c.size for c in chunks)
+        t_recover = time.time() - t0
+        dur.close()
+
+    t0 = time.time()
+    with SelectionEngine(chunks, **kw):     # what recovery substitutes for
+        pass
+    t_cold = time.time() - t0
+    print(f"recover_1e6,{t_recover * 1e6:.0f},"
+          f"epochs={replayed};total=1e6;"
+          f"per_epoch_us={t_recover / replayed * 1e6:.0f};"
+          f"cold_build_us={t_cold * 1e6:.0f}")
+
+
+ALL = [bench_journal_overhead, bench_recover]
+
+if __name__ == "__main__":
+    for f in ALL:
+        f()

@@ -7,13 +7,15 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
                    (skipped silently if the dry-run artifact is absent)
 
 ``--json PATH`` additionally writes every captured row to a
-machine-readable trajectory file (CI uploads it as the BENCH_PR9.json
+machine-readable trajectory file (CI uploads it as the BENCH_PR10.json
 artifact per commit; ``--fast --json`` is the quick tier CI runs, covering
 engine cold-build at 1/4/8 workers, draw_sample throughput, the run_many
-batch, threshold_select throughput at 1e6/1e7 records, and the live-plane
-rows: incremental ingestion vs rebuild-per-append and standing-query lag).
+batch, threshold_select throughput at 1e6/1e7 records, the live-plane
+rows — incremental ingestion vs rebuild-per-append and standing-query
+lag — and the durability rows: fsync'd journal-append overhead and
+journal-replay recovery of a 1e6-record corpus).
 ``--baseline PATH`` diffs the captured rows against a committed trajectory
-file (the repo carries ``BENCH_PR9.json``) and prints a per-row delta
+file (the repo carries ``BENCH_PR10.json``) and prints a per-row delta
 table, so every CI run shows its drift from the checked-in baseline.
 """
 from __future__ import annotations
@@ -68,8 +70,8 @@ def main() -> None:
             print(f"baseline {args.baseline} unreadable ({e}); "
                   "skipping delta table", file=sys.stderr)
 
-    from benchmarks import (bench_kernels, bench_live, bench_serve,
-                            paper_figures)
+    from benchmarks import (bench_durable, bench_kernels, bench_live,
+                            bench_serve, paper_figures)
 
     benches = []
     if not args.fast:
@@ -82,6 +84,7 @@ def main() -> None:
     benches += [(f.__name__, f) for f in bench_kernels.ALL]
     benches += [(f.__name__, f) for f in bench_serve.ALL]
     benches += [(f.__name__, f) for f in bench_live.ALL]
+    benches += [(f.__name__, f) for f in bench_durable.ALL]
 
     failed = []
     rows = []

@@ -14,11 +14,18 @@ Fault-tolerance contract:
     newest is durable;
   * ASYNC: save_async() snapshots to host RAM synchronously (cheap) and
     writes to disk on a background thread — training continues immediately.
+
+Scope note: this is the legacy *training-state* checkpointer (model
+params + optimizer state for the proxy-training loop). Durability of the
+*selection plane* — corpus epochs, standing-query certifications, tenant
+ledgers — lives in `repro.durable` (`DurabilityPlane`,
+`SelectionServer.snapshot()/restore()`), which this module's atomic
+publish now delegates to (`repro.durable.atomic.publish_dir`). New
+crash-recovery surface belongs there, not here.
 """
 from __future__ import annotations
 
 import json
-import os
 import pathlib
 import shutil
 import threading
@@ -26,6 +33,8 @@ from typing import Optional
 
 import jax
 import numpy as np
+
+from repro.durable.atomic import publish_dir
 
 
 def _flatten(tree):
@@ -117,7 +126,7 @@ class CheckpointManager:
             json.dump(manifest, f)
         if final.exists():
             shutil.rmtree(final)
-        os.replace(tmp, final)          # atomic publish
+        publish_dir(tmp, final)         # atomic publish (rename + dir fsync)
         self._gc()
 
     def _gc(self):

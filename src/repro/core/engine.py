@@ -305,6 +305,7 @@ class CorpusState:
     sampling_cache: Dict[Tuple[str, float],
                          List[_ShardChunkState]] = dataclasses.field(
                              default_factory=dict)
+    pins: int = 0                       # live references (engine._gc_lock)
 
 
 class SelectionEngine:
@@ -364,6 +365,12 @@ class SelectionEngine:
         # lock and publish their new CorpusState with one assignment.
         self._use_kernel = use_kernel
         self._ingest_lock = threading.Lock()
+        # Epoch refcounting: `pin`/`unpin` count live references under
+        # this lock; superseded epochs queue here until `gc_epochs` frees
+        # the ones no plan still pins.
+        self._gc_lock = threading.Lock()
+        self._superseded: List[CorpusState] = []
+        self.epochs_freed = 0
         plan = pipeline.ChunkPlan([int(s.shape[0]) for s in arrs],
                                   self.chunk_records)
         flat = (np.concatenate([np.asarray(s, np.float32) for s in arrs])
@@ -465,8 +472,51 @@ class SelectionEngine:
         Pass the returned `CorpusState` to `draw_sample` / `score_at` /
         `QuerySession.submit(state=...)` to keep a multi-step computation
         on one frozen, consistent corpus while `repro.live` appends land
-        concurrently. Cheap (one attribute read — installs are atomic)."""
-        return self._state
+        concurrently. Counts as a live reference: call `unpin` when the
+        computation finishes so `gc_epochs` can free superseded epochs."""
+        with self._gc_lock:
+            st = self._state
+            st.pins += 1
+            return st
+
+    def unpin(self, state: CorpusState) -> None:
+        """Release a reference taken by `pin`. Unbalanced unpins raise."""
+        with self._gc_lock:
+            if state.pins <= 0:
+                raise ValueError(
+                    f"unpin of epoch {state.epoch} with no live pins")
+            state.pins -= 1
+
+    def gc_epochs(self) -> int:
+        """Free superseded epochs with no live pins; returns the count.
+
+        Frees each dead epoch's *per-epoch* host memory — the O(n) flat
+        gather cache, the chunk-mass CDFs, the sketch and plan objects —
+        by dropping the references. Shard arrays themselves are shared
+        across epochs (appends extend the list, never copy members), so
+        they stay alive exactly as long as any live epoch includes them.
+        Called from `SelectionServer.snapshot()`; safe to call anytime.
+        """
+        with self._gc_lock:
+            live = [st for st in self._superseded if st.pins > 0]
+            dead = [st for st in self._superseded if st.pins <= 0]
+            self._superseded = live
+            self.epochs_freed += len(dead)
+        for st in dead:
+            st.shards = []
+            st.shard_sketches = []
+            st.chunk_masses = []
+            st.sampling_cache = {}
+            st.sketch = None
+            st.flat = None
+            st.plan = None
+        return len(dead)
+
+    @property
+    def epochs_live(self) -> int:
+        """Epochs still holding host memory: current + unfreed superseded."""
+        with self._gc_lock:
+            return 1 + len(self._superseded)
 
     @property
     def epoch(self) -> int:
@@ -570,7 +620,11 @@ class SelectionEngine:
             # the first post-append query pays no lazy build.
             for scheme, kappa in list(st.sampling_cache):
                 self._sampling_state(scheme, kappa, state=new_state)
-            self._state = new_state
+            # Install under the GC lock so pin() never races the swap,
+            # and queue the outgoing epoch for gc_epochs().
+            with self._gc_lock:
+                self._superseded.append(st)
+                self._state = new_state
             return new_state
 
     def _sampling_state(self, scheme: str, kappa: float,
@@ -720,11 +774,28 @@ class SelectionEngine:
         `core.oracle.BudgetLedger`. The plan pins one `CorpusState` at
         its first step (`state` overrides which) and computes against
         that frozen epoch end to end, so live-plane appends landing
-        mid-plan can never mix corpora. Returns the ShardedSelection via
-        StopIteration.value.
+        mid-plan can never mix corpora. A plan that pins for itself
+        unpins on exit (normal return, error, or abandonment) so
+        `gc_epochs` can free the epoch; a caller passing `state=` owns
+        that pin. Returns the ShardedSelection via StopIteration.value.
         """
+        st = self.pin() if state is None else state
+        try:
+            result = yield from self._run_plan_pinned(
+                key, query, sink=sink, chunk_records=chunk_records,
+                ledger_parent=ledger_parent, st=st)
+            return result
+        finally:
+            if state is None:
+                self.unpin(st)
+
+    def _run_plan_pinned(self, key, query: SUPGQuery, *,
+                         sink: Optional[pipeline.SelectionSink] = None,
+                         chunk_records: Optional[int] = None,
+                         ledger_parent: Optional[BudgetLedger] = None,
+                         st: CorpusState) \
+            -> Generator[object, Optional[np.ndarray], ShardedSelection]:
         key = jax.random.PRNGKey(0) if key is None else key
-        st = self._state if state is None else state
         ledger = BudgetLedger(query.budget, parent=ledger_parent)
         s = query.budget
         if query.target == "recall":
@@ -800,8 +871,22 @@ class SelectionEngine:
         `ledger_parent` (tenant quota) verification labels are metered
         against the parent too, so a quota-capped JT query fails loudly
         instead of labeling past its tenant's allowance. One pinned
-        `CorpusState` spans both stages."""
-        st = self._state if state is None else state
+        `CorpusState` spans both stages (unpinned on exit when this plan
+        took the pin; a caller passing `state=` owns theirs)."""
+        st = self.pin() if state is None else state
+        try:
+            result = yield from self._run_joint_plan_pinned(
+                key, query, sink=sink, chunk_records=chunk_records,
+                ledger_parent=ledger_parent, st=st)
+            return result
+        finally:
+            if state is None:
+                self.unpin(st)
+
+    def _run_joint_plan_pinned(self, key, query: JointSUPGQuery, *,
+                               sink=None, chunk_records=None,
+                               ledger_parent=None, st: CorpusState) \
+            -> Generator[object, Optional[np.ndarray], ShardedSelection]:
         rt = SUPGQuery(target="recall", gamma=query.gamma_recall,
                        delta=query.delta, budget=query.stage_budget,
                        method=query.method)

@@ -30,12 +30,18 @@ from __future__ import annotations
 
 import concurrent.futures
 import dataclasses
+import os
 import queue
 import threading
 from typing import (Callable, Dict, Iterable, Iterator, List, Optional,
                     Sequence, Tuple, TypeVar)
 
 import numpy as np
+
+# Leaf module (no repro-internal imports of its own) — the two-phase
+# commit primitives ScoreStore.append and BitmaskStore growth publish
+# through. See docs/guarantees.md, "Durability & recovery".
+from repro.durable import atomic as _atomic
 
 # Default streaming granularity: 4M records (16 MB of float32 scores per
 # chunk) — big enough to amortize per-chunk overheads, small enough that
@@ -372,13 +378,27 @@ class ScoreStore:
     plane's scoring jobs; readers are SUPG queries and the sketch kernel.
     """
 
+    _ITEM = np.dtype(np.float32).itemsize
+
     def __init__(self, path, num_records: int, mode="r+", create=False):
         self.path = str(path)
         if create:
             self._arr = np.memmap(self.path, np.float32, "w+",
                                   shape=(num_records,))
             self._arr[:] = -1.0   # unscored marker
+            self._arr.flush()
+            _atomic.commit_length(self.path, num_records * self._ITEM)
         else:
+            # Crash recovery for the two-phase append: bytes past the
+            # committed length are an un-acknowledged grow — truncate
+            # them away and clamp the view, so a reopened store is
+            # exactly its last committed state. Stores without a length
+            # sidecar (pre-durability files, ad-hoc arrays) open as-is.
+            committed = _atomic.committed_length(self.path)
+            if committed is not None:
+                _atomic.discard_uncommitted_tail(self.path)
+                num_records = min(int(num_records),
+                                  committed // self._ITEM)
             self._arr = np.memmap(self.path, np.float32, mode,
                                   shape=(num_records,))
         self._num_scored: Optional[int] = None
@@ -417,6 +437,13 @@ class ScoreStore:
         is delta-updated in place (appends know exactly how many scored
         records they add), so a warm cache never pays a rescan — the
         only cache an append invalidates is none at all.
+
+        The grow is a two-phase commit: the tail bytes are written and
+        fsync'd first, then the new length is published through the
+        atomic sidecar (`repro.durable.atomic.commit_length`). A crash
+        between the phases (`pre_length_commit`) leaves a file whose
+        extra bytes are truncated away on the next open — the append was
+        never acknowledged, so re-issuing it is exactly-once.
         """
         scores = np.asarray(scores, np.float32)
         k = int(scores.shape[0])
@@ -425,12 +452,19 @@ class ScoreStore:
             n = int(old.shape[0])
             if k:
                 old.flush()
+                # Seed the sidecar for pre-durability files so recovery
+                # has a committed length to truncate back to.
+                if _atomic.committed_length(self.path) is None:
+                    _atomic.commit_length(self.path, n * self._ITEM)
                 with open(self.path, "r+b") as f:
-                    f.truncate((n + k) * np.dtype(np.float32).itemsize)
+                    f.truncate((n + k) * self._ITEM)
                 grown = np.memmap(self.path, np.float32, "r+",
                                   shape=(n + k,))
                 grown[n:] = scores
                 grown.flush()
+                _atomic.fsync_path(self.path)
+                _atomic.crashpoint("pre_length_commit")
+                _atomic.commit_length(self.path, (n + k) * self._ITEM)
                 self._arr = grown
             self._version += 1
             if self._num_scored is not None:
@@ -635,10 +669,21 @@ class BitmaskStore(SelectionSink):
     The out-of-core materializer — a 1e9-record selection costs 125 MB of
     disk and O(chunk) host memory while being written. Bits are byte-aligned
     per shard so shards stay independently addressable.
+
+    Epoch-aware growth: a sidecar meta file (``<path>.meta.json``) records
+    the shard layout the stored bits were written under. Reopening with a
+    layout that *extends* the recorded one (same shard sizes, plus new
+    shards at the tail — exactly what a live-corpus append produces) grows
+    the backing file through the two-phase atomic-commit path and keeps
+    every committed bit, so a store sized at certify time covers appended
+    shards as standing-query catch-ups re-emit over them. Reopening with
+    an incompatible layout starts fresh (wipe), the pre-durability
+    behavior.
     """
 
     def __init__(self, path):
         self.path = str(path)
+        self.meta_path = self.path + ".meta.json"
         self._arr: Optional[np.memmap] = None
 
     def open(self, shard_sizes):
@@ -647,7 +692,31 @@ class BitmaskStore(SelectionSink):
             [[0], np.cumsum([(n + 7) // 8 for n in self.shard_sizes])]
         ).astype(np.int64)
         total = max(int(self._byte_offsets[-1]), 1)
-        self._arr = np.memmap(self.path, np.uint8, "w+", shape=(total,))
+        meta = _atomic.read_json(self.meta_path)
+        old_sizes = (None if meta is None
+                     else [int(n) for n in meta.get("shard_sizes", [])])
+        if (old_sizes is not None and os.path.exists(self.path)
+                and len(self.shard_sizes) >= len(old_sizes)
+                and self.shard_sizes[:len(old_sizes)] == old_sizes):
+            # Extend-or-equal: grow in place, preserving committed bits.
+            # Two phases — zero + fsync the grown tail, then commit the
+            # new layout through the atomic meta replace. A crash between
+            # them (`mid_bitmask_commit`) leaves the old layout
+            # committed; the next open simply re-grows, and re-emission
+            # over the new shards is an idempotent OR.
+            old_total = max(int(sum((n + 7) // 8 for n in old_sizes)), 1)
+            with open(self.path, "r+b") as f:
+                f.truncate(total)
+            self._arr = np.memmap(self.path, np.uint8, "r+", shape=(total,))
+            if total > old_total:
+                self._arr[old_total:] = 0
+                self._arr.flush()
+                _atomic.fsync_path(self.path)
+                _atomic.crashpoint("mid_bitmask_commit")
+        else:
+            self._arr = np.memmap(self.path, np.uint8, "w+", shape=(total,))
+        _atomic.atomic_write_json(self.meta_path,
+                                  {"shard_sizes": self.shard_sizes})
 
     def _consume(self, shard_id, local_idx, folded):
         base = int(self._byte_offsets[shard_id])
@@ -656,6 +725,7 @@ class BitmaskStore(SelectionSink):
 
     def _finalize(self):
         self._arr.flush()
+        _atomic.fsync_path(self.path)
 
     def mask(self, shard_id):
         base = int(self._byte_offsets[shard_id])

@@ -1,0 +1,53 @@
+"""Durability & crash-recovery plane.
+
+Three layers, leaf first:
+
+  * `repro.durable.atomic` — atomic replace, two-phase length commit,
+    fsync barriers, and the named-crashpoint hook (`CRASHPOINTS`).
+  * `repro.durable.journal` — `EpochJournal`, the CRC-framed, fsync'd,
+    torn-tail-tolerant write-ahead log of corpus appends.
+  * `repro.durable.recovery` — `DurabilityPlane`, composing journal +
+    shard spool + snapshot into the unit `SelectionServer` owns; plus
+    the query/key codecs snapshots serialize with.
+
+See `docs/guarantees.md` ("Durability & recovery") for the contract:
+what survives a crash, and why a recovered tau is still certified.
+"""
+from repro.durable.atomic import (
+    CRASHPOINTS,
+    atomic_write_bytes,
+    atomic_write_json,
+    commit_length,
+    committed_length,
+    crashpoint,
+    discard_uncommitted_tail,
+    read_json,
+    set_crash_hook,
+)
+from repro.durable.journal import EpochJournal, scan
+from repro.durable.recovery import (
+    DurabilityPlane,
+    decode_key,
+    decode_query,
+    encode_key,
+    encode_query,
+)
+
+__all__ = [
+    "CRASHPOINTS",
+    "DurabilityPlane",
+    "EpochJournal",
+    "atomic_write_bytes",
+    "atomic_write_json",
+    "commit_length",
+    "committed_length",
+    "crashpoint",
+    "decode_key",
+    "decode_query",
+    "discard_uncommitted_tail",
+    "encode_key",
+    "encode_query",
+    "read_json",
+    "scan",
+    "set_crash_hook",
+]

@@ -97,5 +97,11 @@ class IngestPlane:
                               len(self.engine.shards)))
 
     def pin(self) -> CorpusState:
-        """Snapshot the current epoch (delegates to `engine.pin()`)."""
+        """Snapshot the current epoch (delegates to `engine.pin()`).
+        Counts as a live reference — pair with `unpin` so epoch GC can
+        free superseded epochs."""
         return self.engine.pin()
+
+    def unpin(self, state: CorpusState) -> None:
+        """Release a `pin` reference (delegates to `engine.unpin()`)."""
+        self.engine.unpin(state)

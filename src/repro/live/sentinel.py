@@ -175,24 +175,30 @@ class DriftSentinel:
         over the current epoch.
         """
         state = self.engine.pin()
-        scheme = self.scheme_of(query)
-        k_cert, k_probe = jax.random.split(key)
-        if tau is None:
-            sel = self.engine.run(k_cert, self.client, query)
-            tau = float(sel.tau)
-        ref_rate, ref_var, _ = self._probe(k_probe, scheme,
-                                           self.engine.kappa, state)
-        return DriftWatch(query=query, scheme=scheme,
-                          kappa=self.engine.kappa, tau=float(tau),
-                          epoch=state.epoch, ref_rate=ref_rate,
-                          ref_var=ref_var, probe_s=self.probe_budget)
+        try:
+            scheme = self.scheme_of(query)
+            k_cert, k_probe = jax.random.split(key)
+            if tau is None:
+                sel = self.engine.run(k_cert, self.client, query)
+                tau = float(sel.tau)
+            ref_rate, ref_var, _ = self._probe(k_probe, scheme,
+                                               self.engine.kappa, state)
+            return DriftWatch(query=query, scheme=scheme,
+                              kappa=self.engine.kappa, tau=float(tau),
+                              epoch=state.epoch, ref_rate=ref_rate,
+                              ref_var=ref_var, probe_s=self.probe_budget)
+        finally:
+            self.engine.unpin(state)
 
     def check(self, watch: DriftWatch, *, key) -> DriftReport:
         """Fresh probe over the current epoch; flags drift, changes
         nothing."""
         state = self.engine.pin()
-        rate, var, spent = self._probe(key, watch.scheme, watch.kappa,
-                                       state)
+        try:
+            rate, var, spent = self._probe(key, watch.scheme, watch.kappa,
+                                           state)
+        finally:
+            self.engine.unpin(state)
         z = (abs(rate - watch.ref_rate)
              / math.sqrt(max(watch.ref_var + var, 1e-300)))
         self.checks += 1
@@ -212,12 +218,15 @@ class DriftSentinel:
         q = (watch.query if budget is None
              else dataclasses.replace(watch.query, budget=int(budget)))
         state = self.engine.pin()
-        k_run, k_probe = jax.random.split(key)
-        sel = self.engine.run(k_run, self.client, q)
-        watch.tau = float(sel.tau)
-        watch.epoch = state.epoch
-        watch.ref_rate, watch.ref_var, _ = self._probe(
-            k_probe, watch.scheme, watch.kappa, state)
+        try:
+            k_run, k_probe = jax.random.split(key)
+            sel = self.engine.run(k_run, self.client, q)
+            watch.tau = float(sel.tau)
+            watch.epoch = state.epoch
+            watch.ref_rate, watch.ref_var, _ = self._probe(
+                k_probe, watch.scheme, watch.kappa, state)
+        finally:
+            self.engine.unpin(state)
         self.revalidations += 1
         return sel
 

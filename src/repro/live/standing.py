@@ -138,9 +138,11 @@ class StandingRegistry:
         self.session = session
         self._lock = threading.Lock()
         self._standing: List[StandingQuery] = []
-        # (sq, handle, kind, epoch) — kind is "certify" or "reemit"
+        # (sq, handle, kind, state) — kind is "certify" or "reemit"; the
+        # pinned CorpusState is unpinned when the handle folds, so epoch
+        # GC can free superseded epochs once no plan reads them.
         self._pending: List[Tuple[StandingQuery, QueryHandle, str,
-                                  int]] = []
+                                  CorpusState]] = []
         self.emissions = 0
         self.records_reemitted = 0
 
@@ -174,7 +176,18 @@ class StandingRegistry:
                                      state=state)
         with self._lock:
             self._standing.append(sq)
-            self._pending.append((sq, handle, "certify", state.epoch))
+            self._pending.append((sq, handle, "certify", state))
+        return sq
+
+    def adopt(self, sq: StandingQuery) -> StandingQuery:
+        """Reinstate an already-certified `StandingQuery` without running
+        anything — the restore path (`SelectionServer.restore`). The
+        query keeps its snapshotted tau, epoch, and counters; no plan is
+        submitted and no oracle budget is spent. The next `pump` catches
+        its sink up to the current epoch through ordinary re-emission.
+        """
+        with self._lock:
+            self._standing.append(sq)
         return sq
 
     def poll(self) -> None:
@@ -182,10 +195,11 @@ class StandingRegistry:
         with self._lock:
             pending, self._pending = self._pending, []
         keep = []
-        for sq, handle, kind, epoch in pending:
+        for sq, handle, kind, state in pending:
             if not handle.done:
-                keep.append((sq, handle, kind, epoch))
+                keep.append((sq, handle, kind, state))
                 continue
+            self.plane.engine.unpin(state)
             try:
                 sel = handle.result()
             except BaseException as err:  # noqa: BLE001 — folded into sq
@@ -233,10 +247,18 @@ class StandingRegistry:
                 continue
             state = self.plane.engine.pin()
             if sq.epoch >= state.epoch:
+                self.plane.engine.unpin(state)
                 continue
-            shard_ids = self.plane.shards_since(sq.epoch)
+            # An append may install between the pin and this call, so
+            # shards_since (which reads the *current* shard list) can name
+            # shards the pinned epoch does not have — clamp to the pinned
+            # state; sq.epoch only advances to state.epoch, so the excess
+            # is walked next turn.
+            shard_ids = [s for s in self.plane.shards_since(sq.epoch)
+                         if s < len(state.shards)]
             if not shard_ids:
                 sq.epoch = state.epoch
+                self.plane.engine.unpin(state)
                 continue
             plan = _reemission_plan(self.plane.engine, sq.tau, sq.sink,
                                     shard_ids, state)
@@ -245,7 +267,7 @@ class StandingRegistry:
             sq._busy = True
             sq.epoch = state.epoch
             with self._lock:
-                self._pending.append((sq, handle, "reemit", state.epoch))
+                self._pending.append((sq, handle, "reemit", state))
             started += 1
         return started
 

@@ -40,7 +40,7 @@ from __future__ import annotations
 import collections
 import threading
 import time
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple, Union
 
 import jax
 
@@ -50,8 +50,10 @@ from repro.core.oracle import BatchingOracle, BudgetLedger, OracleClient
 from repro.core.resilience import (CircuitBreaker, CircuitOpenError,
                                    RetryPolicy)
 from repro.data import pipeline
-from repro.live import (DriftSentinel, IngestPlane, StandingQuery,
-                        StandingRegistry)
+from repro.durable import (DurabilityPlane, decode_key, decode_query,
+                           encode_key, encode_query)
+from repro.live import (DriftSentinel, DriftWatch, IngestPlane,
+                        StandingQuery, StandingRegistry)
 from repro.serve.limiter import TokenBucket
 from repro.serve.stats import LatencyHistogram, ServerStats, TenantStats
 
@@ -177,6 +179,13 @@ class SelectionServer:
     shard; with ``audit=True`` the drift sentinel probes each new epoch
     and auto re-validates tau through the shared channel when the §6.2
     drift statistic trips.
+
+    Durability surface: pass ``durable=<path>`` to journal every append
+    (write-ahead, fsync'd) under that root; `snapshot()` persists the
+    certifications, sentinel references, and tenant ledger balances that
+    replay cannot recompute, and `SelectionServer.restore(<path>, ...)`
+    brings a killed server back bit-for-bit without re-spending any
+    oracle budget — see docs/guarantees.md, "Durability & recovery".
     """
 
     def __init__(self, engine: SelectionEngine, oracle_fn, *,
@@ -193,9 +202,29 @@ class SelectionServer:
                  sessions: int = 1,
                  own_engine: bool = True,
                  sentinel_probe_budget: int = 2048,
-                 sentinel_sigma: float = 4.0):
+                 sentinel_sigma: float = 4.0,
+                 durable: Optional[Union[str, DurabilityPlane]] = None):
         self.engine = engine
         self._own_engine = bool(own_engine)
+        # Durability plane (optional): journal-first appends + snapshots.
+        # A path means a *new* journal for this server's lifetime — a
+        # journal that already has records belongs to a crashed server
+        # and must come back through `SelectionServer.restore` so its
+        # epochs and certifications are actually re-applied.
+        if isinstance(durable, (str, bytes)) or hasattr(durable,
+                                                        "__fspath__"):
+            durable = DurabilityPlane(durable)
+            if durable.journal_records:
+                raise ValueError(
+                    f"durable root {durable.root!r} already holds "
+                    f"{durable.journal_records} journal record(s) — "
+                    f"recover it with SelectionServer.restore(...) "
+                    f"instead of attaching a fresh server")
+        self.durable: Optional[DurabilityPlane] = durable
+        self._append_lock = threading.Lock()
+        self.recovered_epochs = 0
+        self.recovered_queries = 0
+        self.snapshots = 0
         self.bucket: Optional[TokenBucket] = None
         if isinstance(oracle_fn, OracleClient):
             if rate is not None or burst is not None or max_batch is not None \
@@ -324,6 +353,15 @@ class SelectionServer:
         at submit. Standing queries catch up on the scheduler's next
         turn, and audited subscriptions get a sentinel pass over the new
         epoch before their re-emission runs. Thread-safe.
+
+        With a durability plane the append is journal-first: shard bytes
+        spool to disk and the epoch record fsyncs *before* the in-memory
+        install, so a crash at any instant loses at most an append the
+        caller never saw acknowledged — and if the journal got the record
+        first, restore replays it, matching the timeline the caller was
+        about to see. A client whose `append` call died mid-crash should
+        re-issue it after restore iff the restored epoch shows the append
+        missing (the epoch number is the idempotency key).
         """
         with self._cond:
             if self._closing or self._closed:
@@ -332,8 +370,13 @@ class SelectionServer:
                 raise ServerClosedError(
                     f"SelectionServer scheduler died: {self._fatal!r}")
         # Outside the lock: sketching the new shards may fan out over the
-        # engine's worker pool, and clients must not block on it.
-        epoch = self.plane.append(shards, use_kernel=use_kernel)
+        # engine's worker pool, and clients must not block on it. The
+        # append lock keeps journal order identical to install order.
+        with self._append_lock:
+            if self.durable is not None:
+                shards = self.durable.record_append(
+                    shards, epoch=self.plane.epoch + 1)
+            epoch = self.plane.append(shards, use_kernel=use_kernel)
         with self._cond:
             self._cond.notify_all()
         return epoch
@@ -360,6 +403,8 @@ class SelectionServer:
                     f"SelectionServer scheduler died: {self._fatal!r}")
             ten = self._tenant_locked(tenant)
             sq = StandingQuery(query, key, sink)
+            sq.tenant_name = tenant        # snapshot()'s attribution
+            sq.audited = bool(audit)
             self._subscriptions.append((sq, ten, bool(audit)))
             self._cond.notify_all()
             return sq
@@ -404,7 +449,168 @@ class SelectionServer:
         snap.sentinel_checks = self._sentinel.checks
         snap.sentinel_triggers = self._sentinel.triggers
         snap.revalidations = self._sentinel.revalidations
+        snap.epochs_live = self.engine.epochs_live
+        snap.epochs_freed = self.engine.epochs_freed
+        snap.recovered_epochs = self.recovered_epochs
+        snap.recovered_queries = self.recovered_queries
+        snap.snapshots = self.snapshots
+        if self.durable is not None:
+            snap.durable = True
+            snap.journal_records = self.durable.journal_records
+            snap.journal_bytes = self.durable.journal_bytes
         return snap
+
+    # -- durability surface ----------------------------------------------
+
+    @staticmethod
+    def _encode_sink(sink) -> Optional[dict]:
+        """Serialize a standing query's sink for the snapshot. Disk-backed
+        sinks restore with their committed contents; in-memory sinks
+        restore empty (their pre-crash state died with the process)."""
+        if sink is None:
+            return None
+        if isinstance(sink, pipeline.BitmaskStore):
+            return {"kind": "bitmask", "path": sink.path}
+        if isinstance(sink, pipeline.IndexSink):
+            return {"kind": "index"}
+        return None
+
+    @staticmethod
+    def _decode_sink(obj: Optional[dict]):
+        if obj is None:
+            return None
+        if obj["kind"] == "bitmask":
+            return pipeline.BitmaskStore(obj["path"])
+        return pipeline.IndexSink()
+
+    def snapshot(self) -> dict:
+        """Persist the serving-plane state no replay can recompute.
+
+        Captures every *certified* standing query (tau, epoch, counters,
+        sink identity), every sentinel watch (reference probe, last
+        audited epoch), and every tenant ledger balance; writes it
+        through the durability plane's atomic snapshot publish, then
+        garbage-collects superseded corpus epochs (`engine.gc_epochs` —
+        snapshotting is the natural checkpoint boundary). Returns the
+        snapshot dict. Call at quiescent points (no certification in
+        flight); `serve()`'s users typically snapshot after
+        `wait_certified` or between appends.
+        """
+        standing = self._registry.standing
+        entries = []
+        kept = []
+        for sq in standing:
+            if not sq.certified or sq.tau is None:
+                continue      # uncertified: nothing durable to keep yet
+            kept.append(sq)
+            entries.append({
+                "tenant": getattr(sq, "tenant_name", "default"),
+                "query": encode_query(sq.query),
+                "key": encode_key(sq.key),
+                "tau": float(sq.tau),
+                "epoch": int(sq.epoch),
+                "emissions": int(sq.emissions),
+                "records_reemitted": int(sq.records_reemitted),
+                "sink": self._encode_sink(sq.sink),
+                "audit": bool(getattr(sq, "audited", False)),
+            })
+        watches = []
+        for sq, watch, _base, last in list(self._watches):
+            if sq not in kept:
+                continue
+            watches.append({
+                "standing_index": kept.index(sq),
+                "watch": {"scheme": watch.scheme,
+                          "kappa": float(watch.kappa),
+                          "tau": float(watch.tau),
+                          "epoch": int(watch.epoch),
+                          "ref_rate": float(watch.ref_rate),
+                          "ref_var": float(watch.ref_var),
+                          "probe_s": int(watch.probe_s)},
+                "last_audited": int(last),
+            })
+        with self._lock:
+            tenants = {name: {"charged": int(t.ledger.charged),
+                              "quota": t.stats.quota}
+                       for name, t in self._tenants.items()}
+        state = {"epoch": int(self.plane.epoch), "standing": entries,
+                 "watches": watches, "tenants": tenants}
+        if self.durable is not None:
+            self.durable.write_snapshot(state)
+            self.snapshots += 1
+        self.engine.gc_epochs()
+        return state
+
+    @classmethod
+    def restore(cls, durable_root, oracle_fn, *, base_shards,
+                engine_kw: Optional[dict] = None,
+                use_kernel: Optional[bool] = None,
+                **server_kw) -> "SelectionServer":
+        """Resurrect a crashed server from its durability root.
+
+        `base_shards` are the shards the dead server's engine was
+        *constructed* with (the pre-journal corpus — score files
+        themselves are the data plane's to persist; `ScoreStore`s
+        qualify). The sequence: rebuild the engine over the base corpus,
+        replay every journaled epoch (deterministic delta-sketching — the
+        corpus comes back bit-for-bit), re-charge tenant ledgers to their
+        snapshot balances, and re-adopt certified standing queries and
+        sentinel watches *without running anything* — no oracle budget is
+        re-spent, which is exactly why the recovered taus keep their
+        certifications. Standing queries behind the replayed corpus catch
+        up through ordinary re-emission (tau-threshold walks, zero
+        labels) on the scheduler's first turn.
+        """
+        dur = DurabilityPlane(durable_root)
+        snap = dur.read_snapshot() or {"epoch": 0, "standing": [],
+                                       "watches": [], "tenants": {}}
+        engine = SelectionEngine(base_shards, **(engine_kw or {}))
+        server = cls(engine, oracle_fn, durable=dur, **server_kw)
+        try:
+            server._restore_from(snap, use_kernel=use_kernel)
+        except BaseException:
+            server.close(abandon=True)
+            raise
+        return server
+
+    def _restore_from(self, snap: dict,
+                      use_kernel: Optional[bool] = None) -> None:
+        """Apply a snapshot + journal suffix to this freshly-built server
+        (scheduler idle: nothing is registered yet)."""
+        self.recovered_epochs = self.durable.replay_into(
+            self.plane, use_kernel=use_kernel)
+        with self._lock:
+            for name, info in snap.get("tenants", {}).items():
+                if name not in self._quotas and info.get("quota") is not None:
+                    self._quotas[name] = int(info["quota"])
+                ten = self._tenant_locked(name)
+                if info.get("charged"):
+                    ten.ledger.charge(int(info["charged"]))
+        restored: List[StandingQuery] = []
+        for entry in snap.get("standing", []):
+            sq = StandingQuery(decode_query(entry["query"]),
+                               decode_key(entry["key"]),
+                               self._decode_sink(entry["sink"]))
+            sq.tau = float(entry["tau"])
+            sq.epoch = int(entry["epoch"])
+            sq.emissions = int(entry["emissions"])
+            sq.records_reemitted = int(entry["records_reemitted"])
+            sq.tenant_name = entry["tenant"]
+            sq.audited = bool(entry["audit"])
+            sq._certified.set()
+            self._registry.adopt(sq)
+            restored.append(sq)
+            self.recovered_queries += 1
+        for w in snap.get("watches", []):
+            sq = restored[w["standing_index"]]
+            base = jax.random.fold_in(
+                sq.key if sq.key is not None else jax.random.PRNGKey(0),
+                0x5E47)
+            watch = DriftWatch(query=sq.query, **w["watch"])
+            self._watches.append([sq, watch, base,
+                                  int(w["last_audited"])])
+        with self._cond:
+            self._cond.notify_all()    # pump catch-up re-emissions
 
     # -- scheduler thread -------------------------------------------------
 
@@ -613,6 +819,8 @@ class SelectionServer:
                 close_channel()
         if self._own_engine:
             self.engine.close()
+        if self.durable is not None:
+            self.durable.close()
 
     def __enter__(self) -> "SelectionServer":
         return self

@@ -141,6 +141,14 @@ class ServerStats:
     sentinel_checks: int = 0         # drift probes run
     sentinel_triggers: int = 0       # probes that flagged drift
     revalidations: int = 0           # re-validation queries auto-submitted
+    durable: bool = False            # a durability plane is attached
+    epochs_live: int = 1             # epochs still holding host memory
+    epochs_freed: int = 0            # superseded epochs GC'd so far
+    journal_records: int = 0         # valid epoch-journal records on disk
+    journal_bytes: int = 0           # valid epoch-journal bytes on disk
+    snapshots: int = 0               # snapshot() publishes this process
+    recovered_epochs: int = 0        # epochs replayed at restore()
+    recovered_queries: int = 0       # standing queries re-adopted at restore()
 
     @property
     def admitted(self) -> int:
@@ -190,6 +198,12 @@ class ServerStats:
             f"({self.standing_emissions} re-emissions), sentinel "
             f"{self.sentinel_checks} checks / {self.sentinel_triggers} "
             f"triggers / {self.revalidations} re-validations",
+            f"durable: {'on' if self.durable else 'off'}, "
+            f"{self.journal_records} journal records "
+            f"({self.journal_bytes} B), {self.snapshots} snapshots, "
+            f"epochs {self.epochs_live} live / {self.epochs_freed} freed, "
+            f"recovered {self.recovered_epochs} epochs / "
+            f"{self.recovered_queries} queries",
         ]
         for name in sorted(self.tenants):
             t = self.tenants[name]

@@ -3,7 +3,17 @@
 `repro.testing.faults` carries the deterministic `FaultInjector` used by
 the resilience tests, the chaos acceptance tests, and the faulty-load
 benchmark rows — anything that needs a reproducibly unreliable oracle.
+
+`repro.testing.crash` carries `CrashInjector`, its sibling for the
+durability plane: deterministic process death at named crashpoints.
 """
+from repro.testing.crash import CrashInjector, SimulatedCrash, crash_schedule
 from repro.testing.faults import FaultInjector, fault_schedule
 
-__all__ = ["FaultInjector", "fault_schedule"]
+__all__ = [
+    "CrashInjector",
+    "FaultInjector",
+    "SimulatedCrash",
+    "crash_schedule",
+    "fault_schedule",
+]

@@ -18,6 +18,9 @@ DOC_MODULES = [
     "repro.core.oracle",
     "repro.core.resilience",
     "repro.data.pipeline",
+    "repro.durable.atomic",
+    "repro.durable.journal",
+    "repro.durable.recovery",
     "repro.live.ingest",
     "repro.live.standing",
     "repro.live.sentinel",
@@ -25,6 +28,7 @@ DOC_MODULES = [
     "repro.serve.stats",
     "repro.serve.server",
     "repro.testing.faults",
+    "repro.testing.crash",
 ]
 
 
